@@ -1,0 +1,298 @@
+"""Benchmark harness — one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows (us_per_call = wall time of the
+benchmarked operation on this CPU container; derived = the paper-relevant
+metric).
+
+  fig4_lowering_blocksize   paper Fig. 4  (b_p batching sweep, TPU: VMEM model)
+  fig5_he_model             paper Fig. 5b (HE model vs discrete-event sim)
+  fig6_implicit_momentum    paper Fig. 6  (measured vs 1-1/g)
+  fig7_tradeoff             paper Fig. 7  (HE x SE x total time vs g)
+  fig13_momentum_lesion     paper Fig. 13 (tuned mu vs default 0.9 at g=4)
+  fig23_batch_size          paper Fig. 23 (epochs-to-converge vs batch size)
+  table_optimizer_vs_bayes  paper §VI-C2  (Algorithm 1 vs GP-EI budget)
+  roofline_table            EXPERIMENTS.md §Roofline (from dry-run JSONs)
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def _row(name, us, derived):
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+# ---------------------------------------------------------------------------
+
+def fig4_lowering_blocksize():
+    """Paper Fig. 4: GEMM speed & memory vs b_p. On TPU the tradeoff is VMEM
+    footprint vs MXU tile alignment; interpret-mode wall time included for
+    relative CPU sanity only."""
+    from repro.kernels.lowering_conv import ops as lc, vmem_bytes
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, 16, 16, 8))
+    w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 8, 32))
+    for bp in (1, 2, 4, 8, 16):
+        t0 = time.time()
+        out = lc.lowering_conv(x, w, stride=1, bp=bp, rb=7, interpret=True)
+        out.block_until_ready()
+        us = (time.time() - t0) * 1e6
+        vm = vmem_bytes(bp=bp, rb=7, h=16, w=16, cin=8, kh=3, kw=3, cout=32)
+        gemm_m = bp * 7 * 14
+        aligned = "ok" if gemm_m % 128 == 0 else f"pad{128 - gemm_m % 128}"
+        _row(f"fig4_bp{bp}", us,
+             f"vmem_kB={vm//1024};gemm_M={gemm_m};mxu={aligned}")
+
+
+def fig5_he_model():
+    from repro.core import hardware_model as hm
+    from repro.core import queue_sim
+    ph = hm.PhaseTimes(t_conv_compute_1=1.0, t_fc=0.08, conv_grad_bytes=0.0)
+    for g in (1, 2, 4, 8, 16, 32):
+        t0 = time.time()
+        sim = queue_sim.simulate(g=g, t_conv=1.0 / (32 // g), t_fc=0.08,
+                                 iters=2000, exponential=False)
+        us = (time.time() - t0) * 1e6
+        pred = hm.he_time_per_iteration(g, 32, ph)
+        _row(f"fig5_he_g{g}", us,
+             f"pred={pred:.4f};sim={sim.time_per_iteration:.4f};"
+             f"err={abs(pred-sim.time_per_iteration)/pred:.1%}")
+
+
+def fig6_implicit_momentum():
+    from repro.core.implicit_momentum import (async_quadratic_sim,
+                                              fit_ar2_momentum,
+                                              implicit_momentum)
+    for g in (2, 4, 8, 16):
+        t0 = time.time()
+        traj = async_quadratic_sim(g=g, eta=0.2, steps=250, runs=1500)
+        mu, eta_eff = fit_ar2_momentum(traj[3:])
+        us = (time.time() - t0) * 1e6
+        _row(f"fig6_mom_g{g}", us,
+             f"measured={mu:.3f};theory={implicit_momentum(g):.3f};"
+             f"eta_eff={eta_eff:.4f}")
+
+
+def _se_iters(wl, params, g, mu, eta, steps, target):
+    from repro.core.async_sgd import delayed_sgd_run
+    from repro.core.stat_model import iterations_to_loss
+    batches = wl.sample_batches(jax.random.PRNGKey(1), steps, wl.batch_size)
+    _, losses, _ = delayed_sgd_run(wl.loss_fn, params, batches,
+                                   staleness=g - 1, lr=eta, momentum=mu)
+    return iterations_to_loss(np.asarray(losses), target)
+
+
+def fig7_tradeoff():
+    """HE x SE x total-time vs number of groups, on the CNN workload.
+    HE from the analytic model (TPU-style constants), SE measured by real
+    delayed-SGD training on CPU; momentum tuned per g (paper protocol)."""
+    from repro.core import hardware_model as hm
+    from repro.core.workload import cnn_classify
+    wl = cnn_classify()
+    params = wl.init(jax.random.PRNGKey(0))
+    ph = hm.PhaseTimes(t_conv_compute_1=1.0, t_fc=0.06, conv_grad_bytes=0.0)
+    target, steps, N = 0.55, 500, 16
+    base_total = None
+    for g in (1, 2, 4, 8, 16):
+        t0 = time.time()
+        best = (None, None)
+        for mu in (0.0, 0.3, 0.6, 0.9):
+            it = _se_iters(wl, params, g, mu, 0.05, steps, target)
+            if it is not None and (best[0] is None or it < best[0]):
+                best = (it, mu)
+        us = (time.time() - t0) * 1e6
+        he = hm.he_time_per_iteration(g, N, ph)
+        if best[0] is None:
+            _row(f"fig7_g{g}", us, "no-convergence")
+            continue
+        total = he * best[0]
+        if g == 1:
+            base_total = total
+        _row(f"fig7_g{g}", us,
+             f"he={he:.4f};se_iters={best[0]};mu*={best[1]};"
+             f"total={total:.2f};speedup_vs_sync="
+             f"{(base_total/total if base_total else 1):.2f}")
+
+
+def fig13_momentum_lesion():
+    from repro.core.workload import cnn_classify
+    wl = cnn_classify()
+    params = wl.init(jax.random.PRNGKey(0))
+    g, steps, target = 4, 500, 0.55
+    for name, fixed_mu in (("default_0.9", 0.9), ("omnivore_tuned", None)):
+        t0 = time.time()
+        if fixed_mu is None:
+            cands = [(m, _se_iters(wl, params, g, m, 0.05, steps, target))
+                     for m in (0.0, 0.3, 0.6, 0.9)]
+            cands = [(m, i) for m, i in cands if i is not None]
+            mu, iters = min(cands, key=lambda t: t[1])
+        else:
+            mu, iters = fixed_mu, _se_iters(wl, params, g, fixed_mu, 0.05,
+                                            steps, target)
+        us = (time.time() - t0) * 1e6
+        _row(f"fig13_{name}", us, f"mu={mu};iters={iters}")
+
+
+def fig23_batch_size():
+    from repro.core.async_sgd import delayed_sgd_run
+    from repro.core.stat_model import iterations_to_loss
+    from repro.core.workload import mlp_classify
+    target = 0.35
+    for b in (4, 16, 64, 256):
+        wl = mlp_classify(batch_size=b)
+        params = wl.init(jax.random.PRNGKey(0))
+        best = None
+        t0 = time.time()
+        for eta in (0.2, 0.1, 0.05, 0.02):
+            batches = wl.sample_batches(jax.random.PRNGKey(1), 400, b)
+            _, losses, _ = delayed_sgd_run(wl.loss_fn, params, batches,
+                                           staleness=0, lr=eta, momentum=0.9)
+            it = iterations_to_loss(np.asarray(losses), target)
+            if it is not None and (best is None or it * b < best[0]):
+                best = (it * b, eta, it)
+        us = (time.time() - t0) * 1e6
+        d = (f"examples_to_target={best[0]};eta*={best[1]};iters={best[2]}"
+             if best else "no-convergence")
+        _row(f"fig23_b{b}", us, d)
+
+
+def fig32_rnn_tradeoff():
+    """Paper App. F-F: the compute-group tradeoff on RNN/LSTM models."""
+    from repro.core import hardware_model as hm
+    from repro.core.workload import rnn_classify
+    wl = rnn_classify()
+    params = wl.init(jax.random.PRNGKey(0))
+    ph = hm.PhaseTimes(t_conv_compute_1=1.0, t_fc=0.08, conv_grad_bytes=0.0)
+    target, steps, N = 0.30, 350, 16
+    base = None
+    for g in (1, 2, 4, 8):
+        t0 = time.time()
+        best = (None, None)
+        for mu in (0.0, 0.3, 0.6, 0.9):
+            it = _se_iters(wl, params, g, mu, 0.1, steps, target)
+            if it is not None and (best[0] is None or it < best[0]):
+                best = (it, mu)
+        us = (time.time() - t0) * 1e6
+        he = hm.he_time_per_iteration(g, N, ph)
+        if best[0] is None:
+            _row(f"fig32_rnn_g{g}", us, "no-convergence")
+            continue
+        total = he * best[0]
+        if g == 1:
+            base = total
+        _row(f"fig32_rnn_g{g}", us,
+             f"he={he:.4f};se_iters={best[0]};mu*={best[1]};"
+             f"total={total:.2f};speedup_vs_sync={(base/total if base else 1):.2f}")
+
+
+def fig33_schedules():
+    """Paper App. F-G: Omnivore's epoch-wise re-tuning vs fixed step decay."""
+    from repro.core.auto_optimizer import algorithm1
+    from repro.core.async_sgd import delayed_sgd_run
+    from repro.core.workload import init_state, make_runner, rnn_classify
+    from repro.optim.schedules import step_decay
+    wl = rnn_classify()
+    runner = make_runner(wl, seed=0)
+    state = init_state(wl, seed=0)
+
+    # fixed schedule: eta drops 10x at step 150 (CaffeNet-style)
+    t0 = time.time()
+    params = state[0]
+    sched = step_decay(0.1, drop=10.0, every=150)
+    losses = []
+    for phase, steps in ((0, 150), (1, 150)):
+        batches = wl.sample_batches(jax.random.PRNGKey(phase + 5), steps,
+                                    wl.batch_size)
+        params, l, _ = delayed_sgd_run(wl.loss_fn, params, batches,
+                                       staleness=0, lr=sched(phase * 150),
+                                       momentum=0.9)
+        losses.append(np.asarray(l))
+    us = (time.time() - t0) * 1e6
+    _row("fig33_default_schedule", us,
+         f"final={np.concatenate(losses)[-20:].mean():.4f}")
+
+    t0 = time.time()
+    res = algorithm1(runner, state, n_devices=16, epochs=1, epoch_steps=150,
+                     probe_steps=30, g0=4)
+    us = (time.time() - t0) * 1e6
+    _row("fig33_omnivore_retune", us,
+         f"final={res.losses[-20:].mean():.4f};g={res.g};mu={res.mu};"
+         f"eta={res.eta}")
+
+
+def table_optimizer_vs_bayes():
+    from repro.core.auto_optimizer import algorithm1
+    from repro.core.bayesian import gp_ei_minimize
+    from repro.core.workload import init_state, make_runner, mlp_classify
+    wl = mlp_classify()
+    runner = make_runner(wl, seed=0)
+    state = init_state(wl, seed=0)
+
+    t0 = time.time()
+    res = algorithm1(runner, state, n_devices=16, epochs=1, epoch_steps=150,
+                     probe_steps=25, g0=8)
+    us1 = (time.time() - t0) * 1e6
+    alg1_loss = float(res.losses[-20:].mean())
+    _row("alg1_optimizer", us1,
+         f"g={res.g};mu={res.mu};eta={res.eta};loss={alg1_loss:.4f}")
+
+    def objective(eta, mu, g):
+        _, losses = runner(state, g=g, mu=mu, eta=eta, steps=150, probe=True)
+        arr = np.asarray(losses)
+        arr = arr[np.isfinite(arr)]
+        return float(arr[-20:].mean()) if arr.size else float("inf")
+
+    t0 = time.time()
+    bres = gp_ei_minimize(objective, etas=(0.1, 0.01, 0.001),
+                          mus=(0.0, 0.3, 0.6, 0.9), gs=(1, 2, 4, 8),
+                          budget=12, seed=0)
+    us2 = (time.time() - t0) * 1e6
+    _row("bayes_optimizer", us2,
+         f"evals={bres.evaluations};best={bres.best_y:.4f};"
+         f"wall_ratio_vs_alg1={us2/max(us1,1):.1f}x")
+
+
+def roofline_table():
+    d = ROOT / "experiments" / "dryrun"
+    rows = sorted(d.glob("*__16x16.json"))
+    for f in rows:
+        r = json.loads(f.read_text())
+        if r.get("status") != "ok":
+            _row(f"roofline_{r['arch']}_{r['shape']}", 0.0,
+                 f"status={r.get('status')}")
+            continue
+        rf = r["roofline"]
+        useful = r.get("useful_flops_frac")
+        _row(f"roofline_{r['arch']}_{r['shape']}",
+             r.get("compile_s", 0) * 1e6,
+             f"bottleneck={rf['bottleneck']};step_ms={rf['step_time']*1e3:.2f};"
+             f"tc={rf['t_compute']*1e3:.2f};tm={rf['t_memory']*1e3:.2f};"
+             f"tcoll={rf['t_collective']*1e3:.2f};"
+             f"useful={round(useful, 3) if useful else None}")
+
+
+BENCHES = [fig4_lowering_blocksize, fig5_he_model, fig6_implicit_momentum,
+           fig7_tradeoff, fig13_momentum_lesion, fig23_batch_size,
+           fig32_rnn_tradeoff, fig33_schedules,
+           table_optimizer_vs_bayes, roofline_table]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for bench in BENCHES:
+        t0 = time.time()
+        try:
+            bench()
+        except Exception as e:  # keep the harness running
+            _row(bench.__name__, (time.time() - t0) * 1e6,
+                 f"ERROR={type(e).__name__}:{str(e)[:80]}")
+
+
+if __name__ == "__main__":
+    main()

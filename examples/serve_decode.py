@@ -1,0 +1,67 @@
+"""Serving example: batched prompt-then-generate for three architecture
+families — SSM (mamba2, O(1) state), hybrid (recurrentgemma, RG-LRU + local
+attention ring cache), and the enc-dec whisper backbone consuming stubbed
+audio-frame embeddings.
+
+  PYTHONPATH=src python examples/serve_decode.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import transformer as T
+
+
+def serve_arch(arch, batch=2, prompt=12, gen=8):
+    cfg = get_smoke_config(arch)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    total = prompt + gen
+    cache = T.init_cache(cfg, batch, total)
+    if cfg.arch_type == "encdec":
+        # stubbed conv-frontend output: precomputed mel-frame embeddings
+        enc = 0.1 * jax.random.normal(
+            jax.random.PRNGKey(1), (batch, cfg.encoder_seq, cfg.d_model))
+        enc_out, _, _ = T.forward(
+            params, {"tokens": jnp.zeros((batch, 1), jnp.int32),
+                     "enc_emb": enc}, cfg)
+        # populate cross caches from the encoder (per decoder layer)
+        from repro.models import layers as L
+        # simple: recompute cross K/V per layer via forward(return_cache)
+        _, _, full = T.forward(params,
+                               {"tokens": jnp.zeros((batch, 1), jnp.int32),
+                                "enc_emb": enc}, cfg, return_cache=True)
+        cache["blocks"]["ck"] = full["blocks"]["ck"]
+        cache["blocks"]["cv"] = full["blocks"]["cv"]
+
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(cfg.vocab_size, size=(batch, prompt)),
+                          jnp.int32)
+    decode = jax.jit(lambda p, c, t, pos: T.decode_step(p, c, t, pos, cfg))
+    tok = prompts[:, :1]
+    t0 = time.time()
+    outs = []
+    for t in range(total - 1):
+        logits, cache = decode(params, cache, tok, jnp.int32(t))
+        assert bool(jnp.isfinite(logits).all())
+        if t + 1 < prompt:
+            tok = prompts[:, t + 1:t + 2]
+        else:
+            tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+            outs.append(int(tok[0, 0]))
+    dt = time.time() - t0
+    print(f"  {arch:22s} generated {outs} "
+          f"({dt/(total-1)*1e3:.0f} ms/token-step incl. compile)")
+
+
+def main():
+    print("batched serving across architecture families:")
+    for arch in ("mamba2-2.7b", "recurrentgemma-2b", "whisper-base"):
+        serve_arch(arch)
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

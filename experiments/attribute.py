@@ -1,0 +1,90 @@
+"""Attribute trip-weighted collective bytes of a (arch, shape) lowering to
+JAX op names — the hillclimb profiling tool (dry-run profile, no hardware)."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys
+sys.path.insert(0, "/root/repo/src")
+import re, collections, argparse
+import jax, jax.numpy as jnp
+from repro.configs import get_config, INPUT_SHAPES
+from repro.configs.base import TrainConfig
+from repro.launch import steps as ST
+from repro.launch.mesh import make_production_mesh
+from repro.launch.dryrun import GRAD_ACCUM
+from repro.sharding import rules as SH
+import repro.launch.hlo_parse as HP
+
+def compile_pair(arch, shape_name, accum=None):
+    cfg = get_config(arch); shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh()
+    a = accum if accum is not None else (GRAD_ACCUM.get(arch, 1) if shape.kind == "train" else 1)
+    tc = TrainConfig(grad_accum=a)
+    pspecs = ST.params_specs(cfg)
+    p_shard = SH.params_shardings(pspecs, cfg, mesh)
+    bspecs = ST.batch_specs(cfg, shape, grad_accum=a)
+    b_shard = SH.batch_shardings(bspecs, mesh, batch_dim=1 if a > 1 else 0)
+    with mesh, SH.activation_sharding(mesh):
+        if shape.kind == "train":
+            mspecs = jax.eval_shape(lambda p: jax.tree.map(lambda x: jnp.zeros(x.shape, cfg.dtype("mom")), p), pspecs)
+            m_shard = SH.params_shardings(mspecs, cfg, mesh)
+            step = ST.make_train_step(cfg, tc, shape, grad_shardings=p_shard)
+            return jax.jit(step, in_shardings=(p_shard, m_shard, b_shard),
+                out_shardings=(p_shard, m_shard, SH.replicated(mesh))).lower(pspecs, mspecs, bspecs).compile()
+        elif shape.kind == "prefill":
+            step = ST.make_prefill_step(cfg, shape)
+            return jax.jit(step, in_shardings=(p_shard, b_shard)).lower(pspecs, bspecs).compile()
+        else:
+            cspecs = ST.cache_specs_struct(cfg, shape)
+            c_shard = SH.cache_shardings(cspecs, cfg, mesh, batch=shape.global_batch)
+            step = ST.make_decode_step(cfg, shape)
+            return jax.jit(step, in_shardings=(p_shard, c_shard, b_shard, SH.replicated(mesh)),
+                out_shardings=(SH.replicated(mesh), c_shard)).lower(
+                pspecs, cspecs, bspecs, jax.ShapeDtypeStruct((), jnp.int32)).compile()
+
+def attribute(txt, top=12):
+    comps = HP.split_computations(txt)
+    entry = re.search(r"ENTRY\s+%?([\w.\-]+)", txt).group(1)
+    mult = {n: 0.0 for n in comps}; mult[entry] = 1.0
+    order=[entry]; seen={entry}; i=0
+    while i < len(order):
+        c = order[i]; i += 1
+        comp = comps[c]; base = mult[c]
+        for line in comp.lines:
+            body = re.search(r"body=%?([\w.\-]+)", line); cond = re.search(r"condition=%?([\w.\-]+)", line)
+            if re.search(r"\bwhile\(", line) and body and cond and body.group(1) in comps:
+                t = HP._find_trip_count(comps[cond.group(1)]) if cond.group(1) in comps else 1
+                for callee, f in ((body.group(1), t), (cond.group(1), t+1)):
+                    if callee in comps:
+                        mult[callee] += base*f
+                        if callee not in seen: seen.add(callee); order.append(callee)
+                continue
+            cm = HP._CALL_RE.search(line)
+            if cm:
+                for callee in re.split(r",\s*", cm.group(1)):
+                    callee = callee.lstrip("%")
+                    if callee in comps:
+                        mult[callee] += base
+                        if callee not in seen: seen.add(callee); order.append(callee)
+    agg = collections.Counter()
+    for name, comp in comps.items():
+        w = mult.get(name, 0)
+        if w <= 0: continue
+        for line in comp.lines:
+            m = re.search(r"\b(all-reduce|all-gather|all-to-all|collective-permute|reduce-scatter)(?:-start)?\(", line)
+            if not m or "-done(" in line: continue
+            d = HP._DEF_RE.match(line)
+            if not d: continue
+            rs = HP._SHAPE_RE.match(d.group(2))
+            b = HP._shape_bytes(*rs.groups()) if rs else 0
+            meta = re.search(r'op_name="([^"]+)"', line)
+            nm = (meta.group(1) if meta else "?")
+            agg[(m.group(1), rs.group(2)[:28] if rs else "?", nm[-70:])] += w*b
+    for (op, shp, name), b in agg.most_common(top):
+        print(f"{b/2**30:9.1f} GiB  {op:18s} [{shp}] ...{name}")
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("arch"); ap.add_argument("shape"); ap.add_argument("--accum", type=int)
+    args = ap.parse_args()
+    c = compile_pair(args.arch, args.shape, args.accum)
+    attribute(c.as_text())

@@ -1,0 +1,3 @@
+from repro.checkpoint import checkpointing
+
+__all__ = ["checkpointing"]

@@ -1,0 +1,56 @@
+"""Checkpointing: pytree save/restore (npz) + step metadata. The epoch-wise
+optimizer (Algorithm 1) checkpoints at every epoch boundary (paper §V-B)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_names(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        out[name] = np.asarray(leaf)
+    return out
+
+
+def save(path, tree, *, step: int = 0, extra: Optional[dict] = None) -> None:
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    arrays = _flatten_with_names(tree)
+    np.savez(path.with_suffix(".npz"), **arrays)
+    meta = {"step": step, "leaves": sorted(arrays), **(extra or {})}
+    path.with_suffix(".json").write_text(json.dumps(meta, indent=2))
+
+
+def restore(path, tree_like) -> Tuple[object, int]:
+    """Restore into the structure of ``tree_like``. Returns (tree, step)."""
+    path = Path(path)
+    data = np.load(path.with_suffix(".npz"))
+    meta = json.loads(path.with_suffix(".json").read_text())
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+    leaves = []
+    for p, leaf in flat:
+        name = "/".join(str(getattr(e, "key", getattr(e, "idx", e)))
+                        for e in p)
+        arr = data[name]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {name}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree.structure(tree_like), leaves), int(meta["step"])
+
+
+def latest(dirpath) -> Optional[Path]:
+    d = Path(dirpath)
+    if not d.exists():
+        return None
+    cands = sorted(d.glob("ckpt_*.json"))
+    return cands[-1].with_suffix("") if cands else None

@@ -1,0 +1,4 @@
+"""The four assigned input shapes (public-pool assignment)."""
+from repro.configs.base import INPUT_SHAPES, InputShape
+
+__all__ = ["INPUT_SHAPES", "InputShape"]

@@ -1,0 +1,9 @@
+"""The paper's primary contribution: compute-group asynchrony with
+HE/SE models and the automatic optimizer (Algorithm 1)."""
+from repro.core import (async_sgd, auto_optimizer, bayesian, compute_groups,
+                        hardware_model, implicit_momentum, queue_sim,
+                        stat_model, workload)
+
+__all__ = ["async_sgd", "auto_optimizer", "bayesian", "compute_groups",
+           "hardware_model", "implicit_momentum", "queue_sim", "stat_model",
+           "workload"]

@@ -1,0 +1,161 @@
+"""Asynchronous (stale-gradient) SGD with compute groups.
+
+Two implementations of the paper's execution strategy:
+
+1. ``delayed_sgd_run`` — the Theorem-1-exact object: SGD where the gradient
+   applied at step t was evaluated at ``W_{t-S}`` (S = g-1). Used by the
+   statistical-efficiency experiments; carries an (S+1)-deep parameter
+   history, so it is meant for small models on CPU.
+
+2. ``grouped_train_step`` — the deployable SPMD step: each round, all g
+   groups compute gradients at the round-start parameters **in parallel**
+   (full hardware utilization on the mesh), then the g updates are applied
+   **sequentially**, so group i's gradient lands i updates stale — the
+   paper's Fig. 17(b) round-robin picture. ``sync_head`` implements the
+   merged-FC optimization: head params see the *summed* (zero-staleness)
+   update each round.
+
+Both reduce exactly to synchronous data-parallel SGD at g=1.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.sgd import sgd_update
+
+
+# ---------------------------------------------------------------------------
+# 1. Exact delayed SGD (Theorem-1 semantics), for SE experiments
+# ---------------------------------------------------------------------------
+
+def delayed_sgd_run(loss_fn: Callable, params, batches, *, staleness: int,
+                    lr: float, momentum: float = 0.0, weight_decay: float = 0.0,
+                    record_params: bool = False):
+    """Run ``T`` delayed-SGD steps (T = leading dim of ``batches``).
+
+    Update:  V_{t+1} = mu V_t - eta grad(W_{t-S});  W_{t+1} = W_t + V_{t+1}.
+    For t < S the oldest available parameters are used (cold history).
+
+    Returns (final_params, losses (T,), params_trace or None).
+    """
+    S = staleness
+    flat, tree = jax.tree.flatten(params)
+    hist = [jnp.stack([f] * (S + 1)) for f in flat]     # ring of last S+1 params
+    mom = [jnp.zeros_like(f) for f in flat]
+
+    def step(carry, batch):
+        hist, mom, t = carry
+        # oldest params in the ring = W_{t-S} (clamped during cold history)
+        idx = jnp.where(t >= S, (t - S) % (S + 1), 0)
+        stale = tree.unflatten([h[idx] for h in hist])
+        cur = tree.unflatten([h[t % (S + 1)] for h in hist])
+        loss, grads = jax.value_and_grad(loss_fn)(stale, batch)
+        gflat = jax.tree.leaves(grads)
+        new_flat, new_mom = [], []
+        for c, g, v in zip(jax.tree.leaves(cur), gflat, mom):
+            if weight_decay:
+                g = g + weight_decay * c
+            v_new = momentum * v - lr * g
+            new_flat.append(c + v_new)
+            new_mom.append(v_new)
+        new_hist = [h.at[(t + 1) % (S + 1)].set(nf)
+                    for h, nf in zip(hist, new_flat)]
+        out = (tree.unflatten(new_flat) if record_params else None, loss)
+        return (new_hist, new_mom, t + 1), out
+
+    (hist, mom, t), (trace, losses) = jax.lax.scan(
+        step, (hist, mom, jnp.int32(0)), batches)
+    final = tree.unflatten([h[t % (S + 1)] for h in hist])
+    return final, losses, trace
+
+
+# ---------------------------------------------------------------------------
+# 2. Deployable SPMD grouped step
+# ---------------------------------------------------------------------------
+
+def make_grouped_train_step(loss_fn: Callable, *, num_groups: int, lr: float,
+                            momentum: float, weight_decay: float = 0.0,
+                            head_filter: Optional[Callable] = None,
+                            grad_accum: int = 1):
+    """Build ``step(params, mom_buf, batches) -> (params, mom_buf, loss)``.
+
+    ``batches``: pytree with leading axis ``(g, ...)`` (one microbatch per
+    group, see ``group_batch_split``); with grad_accum > 1 the per-group
+    batch has a further leading accumulation axis ``(g, A, ...)``.
+
+    ``head_filter(path) -> bool`` marks head ("FC-phase") params: merged-FC
+    semantics — their g per-group gradients are averaged and applied once
+    per round (zero staleness), while backbone params receive the g updates
+    sequentially (staleness 0..g-1).
+    """
+    g = num_groups
+
+    def per_group_grad(params, batch):
+        if grad_accum == 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+
+        def acc_step(carry, micro):
+            l, gr = jax.value_and_grad(loss_fn)(params, micro)
+            return (carry[0] + l, jax.tree.map(jnp.add, carry[1], gr)), None
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (l, gr), _ = jax.lax.scan(acc_step, (jnp.float32(0.0), zeros), batch)
+        return l / grad_accum, jax.tree.map(lambda x: x / grad_accum, gr)
+
+    def is_head_tree(params):
+        if head_filter is None:
+            return jax.tree.map(lambda _: False, params)
+        return jax.tree.map_with_path(lambda path, _: bool(head_filter(path)),
+                                      params)
+
+    def step(params, mom_buf, batches):
+        # all group gradients at round-start params, in parallel
+        losses, grads = jax.vmap(per_group_grad, in_axes=(None, 0))(params, batches)
+        head_mask = is_head_tree(params)
+
+        if g == 1:
+            grads0 = jax.tree.map(lambda gr: gr[0], grads)
+            params, mom_buf = sgd_update(params, grads0, mom_buf, lr=lr,
+                                         momentum=momentum,
+                                         weight_decay=weight_decay)
+            return params, mom_buf, losses.mean()
+
+        # merged-FC head: single synchronous averaged update per round
+        head_grads = jax.tree.map(lambda gr: gr.mean(axis=0), grads)
+
+        def upd_leaf(p, gg, v):
+            g32 = gg.astype(jnp.float32)
+            if weight_decay:
+                g32 = g32 + weight_decay * p.astype(jnp.float32)
+            v_new = momentum * v.astype(jnp.float32) - lr * g32
+            return ((p.astype(jnp.float32) + v_new).astype(p.dtype),
+                    v_new.astype(v.dtype))
+
+        def apply_one(carry, i):
+            p, v = carry
+            gi = jax.tree.map(lambda gr: gr[i], grads)
+            # backbone: apply group-i gradient; head: untouched this sub-step
+            new = jax.tree.map(
+                lambda m, pp, gg, vv: (pp, vv) if m else upd_leaf(pp, gg, vv),
+                head_mask, p, gi, v)
+            p = jax.tree.map(lambda t: t[0], new,
+                             is_leaf=lambda t: isinstance(t, tuple))
+            v = jax.tree.map(lambda t: t[1], new,
+                             is_leaf=lambda t: isinstance(t, tuple))
+            return (p, v), None
+
+        (params, mom_buf), _ = jax.lax.scan(
+            apply_one, (params, mom_buf), jnp.arange(g))
+        # head update (zero-staleness, merged FC), once per round
+        new = jax.tree.map(
+            lambda m, pp, gg, vv: upd_leaf(pp, gg, vv) if m else (pp, vv),
+            head_mask, params, head_grads, mom_buf)
+        params = jax.tree.map(lambda t: t[0], new,
+                              is_leaf=lambda t: isinstance(t, tuple))
+        mom_buf = jax.tree.map(lambda t: t[1], new,
+                               is_leaf=lambda t: isinstance(t, tuple))
+        return params, mom_buf, losses.mean()
+
+    return step

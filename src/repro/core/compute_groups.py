@@ -1,0 +1,49 @@
+"""Compute groups — the paper's execution-strategy axis (§IV-A).
+
+``g`` groups of ``k = N/g`` devices each. Within a group: synchronous
+data-parallel SGD over the group's batch. Across groups: asynchronous
+round-robin updates (staleness S = g - 1).
+
+On an SPMD TPU mesh the group axis is a split of the data axis:
+``data = (group, within_group)``. ``group_batch_split`` reshapes a global
+batch so axis 0 enumerates groups.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupSpec:
+    num_groups: int               # g
+    num_devices: int = 1          # N (conv-phase devices in paper terms)
+
+    def __post_init__(self):
+        if self.num_devices % self.num_groups:
+            raise ValueError(
+                f"g={self.num_groups} must divide N={self.num_devices}")
+
+    @property
+    def staleness(self) -> int:  # S
+        return self.num_groups - 1
+
+    @property
+    def group_size(self) -> int:  # k
+        return self.num_devices // self.num_groups
+
+    @property
+    def implicit_momentum(self) -> float:
+        """Theorem 1: asynchrony contributes momentum 1 - 1/g."""
+        return 1.0 - 1.0 / self.num_groups
+
+
+def group_batch_split(batch, g: int):
+    """Reshape every leaf (B, ...) -> (g, B/g, ...): one microbatch per group."""
+    def split(x):
+        b = x.shape[0]
+        if b % g:
+            raise ValueError(f"batch {b} not divisible by g={g}")
+        return x.reshape(g, b // g, *x.shape[1:])
+    return jax.tree.map(split, batch)

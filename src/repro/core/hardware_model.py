@@ -1,0 +1,101 @@
+"""Hardware-efficiency (HE) model — paper §IV-B, adapted to TPU.
+
+    HE(g) = max( t_fc,  (t_conv(k) + t_fc) / g ),   k = N / g
+    t_conv(k) = max( t_conv_compute(1)/k , t_conv_network(k) )
+
+Paper's parameter-server network term ``T_n,c * k`` (Ethernet congestion)
+becomes, on TPU, the ring reduce-scatter+all-gather time of the backbone
+gradients over the group — bandwidth-optimal and ~flat in k:
+    t_coll(k) = 2 * bytes * (k-1)/k / ici_bw
+(per-chip time; ~2*bytes/ici_bw for large k).
+
+The phase times can be *derived from the compiled dry-run* via
+``phase_times_from_roofline`` so the same model that the paper fit with
+measurements is fit here from `cost_analysis()` + HLO collective bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class TPUSpec:
+    """TPU v5e (the target device of this reproduction)."""
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12          # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9               # bytes/s per chip
+    ici_bw: float = 50e9                # bytes/s per link
+
+
+V5E = TPUSpec()
+
+
+def collective_time(bytes_per_chip: float, k: int, spec: TPUSpec = V5E) -> float:
+    """Ring reduce-scatter + all-gather over a group of size k."""
+    if k <= 1:
+        return 0.0
+    return 2.0 * bytes_per_chip * (k - 1) / k / spec.ici_bw
+
+
+@dataclasses.dataclass(frozen=True)
+class PhaseTimes:
+    """One-device phase times (paper's T_c,c / t_fc) + collective volume."""
+    t_conv_compute_1: float      # backbone fwd+bwd on ONE device, seconds
+    t_fc: float                  # head phase service time, seconds
+    conv_grad_bytes: float       # backbone grad bytes (per-chip, for t_coll)
+
+
+def t_conv(k: int, ph: PhaseTimes, spec: TPUSpec = V5E) -> float:
+    """Group-of-k backbone time: compute shrinks /k, collectives overlap
+    (paper's max(), §App D-D1)."""
+    comp = ph.t_conv_compute_1 / k
+    coll = collective_time(ph.conv_grad_bytes, k, spec)
+    return max(comp, coll)
+
+
+def he_time_per_iteration(g: int, n_devices: int, ph: PhaseTimes,
+                          spec: TPUSpec = V5E) -> float:
+    """Predicted time per iteration for g compute groups (paper HE model)."""
+    if n_devices % g:
+        raise ValueError(f"g={g} must divide N={n_devices}")
+    k = n_devices // g
+    return max(ph.t_fc, (t_conv(k, ph, spec) + ph.t_fc) / g)
+
+
+def fc_saturated(g: int, n_devices: int, ph: PhaseTimes,
+                 spec: TPUSpec = V5E) -> bool:
+    """Paper's saturation condition: t_conv(k) + t_fc < g * t_fc."""
+    k = n_devices // g
+    return t_conv(k, ph, spec) + ph.t_fc < g * ph.t_fc
+
+
+def smallest_saturating_g(n_devices: int, ph: PhaseTimes,
+                          spec: TPUSpec = V5E) -> int:
+    """Optimizer short-circuit (§App E-C1): start Algorithm 1 at the smallest
+    g that saturates the FC server."""
+    g = 1
+    while g < n_devices:
+        if fc_saturated(g, n_devices, ph, spec):
+            return g
+        g *= 2
+    return n_devices
+
+
+def he_penalty(g: int, n_devices: int, ph: PhaseTimes,
+               spec: TPUSpec = V5E) -> float:
+    """P_HE(S) = HE(S)/HE(0), normalized to sync (paper App D-D)."""
+    return (he_time_per_iteration(g, n_devices, ph, spec)
+            / he_time_per_iteration(1, n_devices, ph, spec))
+
+
+def phase_times_from_roofline(*, backbone_flops: float, head_flops: float,
+                              backbone_bytes: float, head_bytes: float,
+                              grad_bytes_per_chip: float,
+                              spec: TPUSpec = V5E) -> PhaseTimes:
+    """Derive the HE model's parameters from compiled-program roofline terms
+    (single-chip FLOPs/bytes split between backbone and head phases)."""
+    t_conv_1 = max(backbone_flops / spec.peak_flops,
+                   backbone_bytes / spec.hbm_bw)
+    t_fc = max(head_flops / spec.peak_flops, head_bytes / spec.hbm_bw)
+    return PhaseTimes(t_conv_compute_1=t_conv_1, t_fc=t_fc,
+                      conv_grad_bytes=grad_bytes_per_chip)

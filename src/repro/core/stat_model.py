@@ -1,0 +1,69 @@
+"""Statistical-efficiency (SE) bookkeeping — paper §IV-C / App F-C.
+
+    SE(g)      = iterations to reach a target loss with g groups
+    P_SE(S)    = SE(S) / SE(0)
+    P_HE(S)    = HE(S) / HE(0)
+    P_total(S) = P_SE * P_HE          (time-to-accuracy, normalized to sync)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence
+
+import numpy as np
+
+from repro.core.implicit_momentum import implicit_momentum
+
+
+def iterations_to_loss(losses: Sequence[float], target: float,
+                       smooth: int = 5) -> Optional[int]:
+    """First iteration at which the running-mean loss reaches ``target``."""
+    arr = np.asarray(losses, dtype=np.float64)
+    if arr.size == 0:
+        return None
+    if smooth > 1:
+        kernel = np.ones(min(smooth, arr.size)) / min(smooth, arr.size)
+        arr = np.convolve(arr, kernel, mode="valid")
+    hits = np.nonzero(arr <= target)[0]
+    return int(hits[0]) if hits.size else None
+
+
+@dataclasses.dataclass
+class TradeoffPoint:
+    g: int
+    mu: float
+    eta: float
+    he_time: float                 # seconds / iteration (model or measured)
+    se_iters: Optional[int]        # iterations to target loss
+
+    @property
+    def total_time(self) -> Optional[float]:
+        if self.se_iters is None:
+            return None
+        return self.he_time * self.se_iters
+
+
+def penalties(points: Dict[int, TradeoffPoint]):
+    """Normalize a {g: point} sweep to the sync point (paper's P_* curves)."""
+    base = points[1]
+    out = {}
+    for g, pt in sorted(points.items()):
+        out[g] = {
+            "P_HE": pt.he_time / base.he_time,
+            "P_SE": (pt.se_iters / base.se_iters
+                     if pt.se_iters and base.se_iters else None),
+            "P_total": (pt.total_time / base.total_time
+                        if pt.total_time and base.total_time else None),
+            "implicit_momentum": implicit_momentum(g),
+            "mu": pt.mu, "eta": pt.eta,
+        }
+    return out
+
+
+def predict_se_penalty(g: int, mu_star_total: float, sharpness: float = 4.0):
+    """Qualitative SE-penalty model: no penalty while implicit momentum stays
+    below the optimal total momentum, growing penalty beyond (Fig. 6/7)."""
+    mu_i = implicit_momentum(g)
+    if mu_i <= mu_star_total:
+        return 1.0
+    return float(1.0 + sharpness * (mu_i - mu_star_total) / (1 - mu_star_total))

@@ -1,0 +1,161 @@
+"""Small trainable workloads + a Runner factory for the optimizer
+experiments (CPU-scale stand-ins for the paper's MNIST/CIFAR/ImageNet-8).
+
+- ``quadratic``: noisy strongly-convex quadratic — Theorem 1 is exact here.
+- ``mlp_classify``: 2-layer MLP on a synthetic Gaussian-cluster task.
+- ``cnn_classify``: the paper's CNN family (LeNet-ish) on synthetic images,
+  with the conv/FC phase split (merged-FC head_filter applies).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.async_sgd import delayed_sgd_run
+from repro.models import cnn as cnn_mod
+
+
+@dataclasses.dataclass
+class Workload:
+    name: str
+    init: Callable                      # key -> params
+    loss_fn: Callable                   # (params, batch) -> scalar
+    sample_batches: Callable            # (key, steps, batch_size) -> stacked batches
+    batch_size: int = 32
+    head_filter: Optional[Callable] = None
+
+
+def quadratic(dim: int = 32, cond: float = 10.0, noise: float = 0.1) -> Workload:
+    eig = jnp.linspace(1.0, cond, dim) / cond
+    def init(key):
+        return {"w": jax.random.normal(key, (dim,))}
+    def loss_fn(params, batch):
+        g_noise = batch["xi"]
+        w = params["w"]
+        return 0.5 * jnp.sum(eig * w * w) + jnp.dot(g_noise, w)
+    def sample(key, steps, batch_size):
+        return {"xi": noise * jax.random.normal(key, (steps, dim))}
+    return Workload("quadratic", init, loss_fn, sample, batch_size=1)
+
+
+def mlp_classify(dim: int = 16, classes: int = 4, hidden: int = 32,
+                 batch_size: int = 32) -> Workload:
+    centers = jax.random.normal(jax.random.PRNGKey(99), (classes, dim)) * 2.0
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        return {"w1": jax.random.normal(k1, (dim, hidden)) * dim ** -0.5,
+                "b1": jnp.zeros((hidden,)),
+                "w2": jax.random.normal(k2, (hidden, classes)) * hidden ** -0.5,
+                "b2": jnp.zeros((classes,))}
+    def loss_fn(params, batch):
+        h = jax.nn.relu(batch["x"] @ params["w1"] + params["b1"])
+        logits = h @ params["w2"] + params["b2"]
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.take_along_axis(logp, batch["y"][:, None], axis=-1).mean()
+    def sample(key, steps, batch_size_):
+        k1, k2 = jax.random.split(key)
+        y = jax.random.randint(k1, (steps, batch_size_), 0, classes)
+        x = centers[y] + jax.random.normal(k2, (steps, batch_size_, dim))
+        return {"x": x, "y": y}
+    return Workload("mlp", init, loss_fn, sample, batch_size=batch_size)
+
+
+def cnn_classify(batch_size: int = 16) -> Workload:
+    cfg = dataclasses.replace(cnn_mod.LENET, image_size=12, num_classes=4,
+                              convs=(cnn_mod.ConvSpec(8, 3, pool=2),),
+                              fc_dims=(16,))
+    proto = jax.random.normal(jax.random.PRNGKey(5),
+                              (4, cfg.image_size, cfg.image_size, 1))
+    def init(key):
+        return cnn_mod.init_params(key, cfg)
+    def loss_fn(params, batch):
+        return cnn_mod.loss_fn(params, batch, cfg)
+    def sample(key, steps, bsz):
+        k1, k2 = jax.random.split(key)
+        y = jax.random.randint(k1, (steps, bsz), 0, 4)
+        x = proto[y] + 0.5 * jax.random.normal(
+            k2, (steps, bsz, cfg.image_size, cfg.image_size, 1))
+        return {"images": x, "labels": y}
+    return Workload("cnn", init, loss_fn, sample, batch_size=batch_size,
+                    head_filter=cnn_mod.head_filter)
+
+
+def rnn_classify(dim: int = 8, hidden: int = 24, seq: int = 16,
+                 classes: int = 2, batch_size: int = 16) -> Workload:
+    """Paper App. F-F (Fig. 32): the compute-group tradeoff on RNN/LSTM
+    models. Single-layer LSTM over synthetic AR(1) sequences whose decay
+    rate determines the class."""
+    decays = jnp.linspace(0.35, 0.9, classes)
+
+    def init(key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "wx": jax.random.normal(k1, (dim, 4 * hidden)) * dim ** -0.5,
+            "wh": jax.random.normal(k2, (hidden, 4 * hidden)) * hidden ** -0.5,
+            "b": jnp.zeros((4 * hidden,)),
+            "w_out": jax.random.normal(k3, (hidden, classes)) * hidden ** -0.5,
+        }
+
+    def lstm(params, xs):
+        def cell(carry, x):
+            h, c = carry
+            z = x @ params["wx"] + h @ params["wh"] + params["b"]
+            i, f, g, o = jnp.split(z, 4, axis=-1)
+            c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+            h = jax.nn.sigmoid(o) * jnp.tanh(c)
+            return (h, c), None
+        b = xs.shape[0]
+        h0 = (jnp.zeros((b, hidden)), jnp.zeros((b, hidden)))
+        (h, _), _ = jax.lax.scan(cell, h0, xs.transpose(1, 0, 2))
+        return h @ params["w_out"]
+
+    def loss_fn(params, batch):
+        logits = lstm(params, batch["x"])
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.take_along_axis(logp, batch["y"][:, None], axis=-1).mean()
+
+    def sample(key, steps, bsz):
+        k1, k2 = jax.random.split(key)
+        y = jax.random.randint(k1, (steps, bsz), 0, classes)
+        noise = jax.random.normal(k2, (steps, bsz, seq, dim))
+
+        def roll(carry, n):
+            d = carry[1]
+            nxt = carry[0] * d[..., None] + n
+            return (nxt, d), nxt
+        d = decays[y]
+        _, xs = jax.lax.scan(
+            roll, (jnp.zeros((steps, bsz, dim)), d),
+            noise.transpose(2, 0, 1, 3))
+        return {"x": xs.transpose(1, 2, 0, 3), "y": y}
+
+    return Workload("lstm", init, loss_fn, sample, batch_size=batch_size)
+
+
+def make_runner(workload: Workload, *, seed: int = 0,
+                weight_decay: float = 0.0):
+    """Runner for Algorithm 1 backed by exact delayed SGD (staleness g-1).
+    state = (params, step_counter). Probe runs don't mutate the stream key
+    schedule (paper: probes restart from the same checkpoint)."""
+
+    def runner(state, *, g, mu, eta, steps, probe):
+        params, t0 = state
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), t0 + (1 if probe else 0))
+        batches = workload.sample_batches(key, steps, workload.batch_size)
+        final, losses, _ = delayed_sgd_run(
+            workload.loss_fn, params, batches, staleness=g - 1,
+            lr=eta, momentum=mu, weight_decay=weight_decay)
+        losses = np.asarray(losses)
+        if probe:
+            return state, losses
+        return (final, t0 + steps), losses
+
+    return runner
+
+
+def init_state(workload: Workload, seed: int = 0):
+    return (workload.init(jax.random.PRNGKey(seed)), 0)

@@ -1,0 +1,2 @@
+from repro.kernels.flash_attention import ops, ref
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas

@@ -1,0 +1,101 @@
+"""Pallas TPU flash attention (causal / sliding-window).
+
+Grid: (batch*heads, q_blocks, kv_blocks) with the kv dimension innermost and
+sequential — running max / denominator / accumulator live in VMEM scratch
+across kv steps (the classic flash recurrence, TPU-style: blocks sized for
+VMEM, dots shaped for the 128x128 MXU).
+
+Sliding-window support doubles as the sub-quadratic path for the long_500k
+shape on dense architectures (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            bq, bk, causal, window, scale, n_kv):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]                                    # (bq, hd)
+    k = k_ref[0]                                    # (bk, hd)
+    v = v_ref[0]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    ok = jnp.ones((bq, bk), dtype=bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window is not None:
+        ok &= kpos > qpos - window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_new = l_prev * alpha + p.sum(axis=-1, keepdims=True)
+    acc_scr[...] = (acc_scr[...] * alpha
+                    + jnp.dot(p.astype(v.dtype), v,
+                              preferred_element_type=jnp.float32))
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ik == n_kv - 1)
+    def _out():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True, window=None,
+                           bq: int = 128, bk: int = 128,
+                           interpret: bool = False):
+    """q,k,v: (BH, S, hd) — batch and heads pre-folded. Same head count for
+    k/v (GQA repeat happens in the wrapper)."""
+    bh, sq, hd = q.shape
+    sk = k.shape[1]
+    bq = min(bq, sq)
+    while sq % bq:
+        bq -= 1
+    bk = min(bk, sk)
+    while sk % bk:
+        bk -= 1
+    n_kv = sk // bk
+    grid = (bh, sq // bq, n_kv)
+    scale = 1.0 / math.sqrt(hd)
+    return pl.pallas_call(
+        functools.partial(_kernel, bq=bq, bk=bk, causal=causal, window=window,
+                          scale=scale, n_kv=n_kv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, hd), q.dtype),
+        scratch_shapes=[
+            # running max / denom / accumulator, fp32 in VMEM
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,32 @@
+"""Jit'd public wrapper: GQA-aware flash attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "bq", "bk", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window=None,
+                    bq: int = 128, bk: int = 128, interpret: bool = True):
+    """q: (B, Sq, H, hd); k,v: (B, Sk, K, hd) with H = K*G (GQA: kv heads
+    repeated to H inside the wrapper). Returns (B, Sq, H, hd).
+
+    interpret=True on CPU (this container); False on real TPU.
+    """
+    b, sq, h, hd = q.shape
+    kh = k.shape[2]
+    if kh != h:
+        rep = h // kh
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, k.shape[1], hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, v.shape[1], hd)
+    of = flash_attention_pallas(qf, kf, vf, causal=causal, window=window,
+                                bq=bq, bk=bk, interpret=interpret)
+    return of.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)

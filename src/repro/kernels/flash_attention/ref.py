@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for flash attention (causal / sliding-window, MHA)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window=None):
+    """q,k,v: (B, S, H, hd) (same head count — GQA handled by the wrapper).
+    Returns (B, S, H, hd)."""
+    hd = q.shape[-1]
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    scores = scores / math.sqrt(hd)
+    sq, sk = q.shape[1], k.shape[1]
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    ok = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window is not None:
+        ok &= kpos > qpos - window
+    scores = jnp.where(ok, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, v)

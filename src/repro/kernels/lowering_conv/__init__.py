@@ -1,0 +1,3 @@
+from repro.kernels.lowering_conv import ops, ref
+from repro.kernels.lowering_conv.lowering_conv import (lowering_conv_pallas,
+                                                       vmem_bytes)

@@ -1,0 +1,26 @@
+"""Jit'd public wrapper for the lowering-conv kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.lowering_conv.lowering_conv import lowering_conv_pallas
+from repro.kernels.lowering_conv.ref import lowered_conv_ref
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "bp", "rb", "interpret"))
+def lowering_conv(x, w, *, stride: int = 1, bp: int = 8, rb: int = 8,
+                  interpret: bool = True):
+    """Convolution via fused lowering+GEMM. On CPU (this container) the
+    Pallas kernel runs in interpret mode; pass interpret=False on real TPU.
+    """
+    return lowering_conv_pallas(x, w, stride=stride, bp=bp, rb=rb,
+                                interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("stride",))
+def lowering_conv_xla(x, w, *, stride: int = 1):
+    """XLA fallback implementing the same lowering/GEMM algorithm (used by
+    model code on non-TPU backends and by the dry-run)."""
+    return lowered_conv_ref(x, w, stride=stride)

@@ -1,0 +1,48 @@
+"""Pure-jnp oracle for the lowering+GEMM convolution (paper §III, Fig. 2).
+
+Two references: XLA's native conv, and an explicit lowering/GEMM/lifting
+pipeline that mirrors the paper's three logical steps (used to check the
+kernel implements the *same algorithm*, not just the same function).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def conv_ref(x: jax.Array, w: jax.Array, stride: int = 1) -> jax.Array:
+    """x: (B, H, W, Cin); w: (kh, kw, Cin, Cout); VALID padding."""
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def lower(x: jax.Array, kh: int, kw: int, stride: int = 1) -> jax.Array:
+    """Lowering phase: (B,H,W,Cin) -> D_hat (B*Ho*Wo, kh*kw*Cin).
+    Data replication factor = kh*kw/stride^2 (paper App C-A1)."""
+    b, h, w, cin = x.shape
+    ho = (h - kh) // stride + 1
+    wo = (w - kw) // stride + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            sl = jax.lax.slice(x, (0, i, j, 0),
+                               (b, i + (ho - 1) * stride + 1,
+                                j + (wo - 1) * stride + 1, cin),
+                               (1, stride, stride, 1))
+            cols.append(sl)                       # (B, Ho, Wo, Cin)
+    low = jnp.stack(cols, axis=3)                 # (B, Ho, Wo, kh*kw, Cin)
+    return low.reshape(b * ho * wo, kh * kw * cin)
+
+
+def lowered_conv_ref(x: jax.Array, w: jax.Array, stride: int = 1) -> jax.Array:
+    """Lowering -> one big GEMM -> lifting (the paper's CPU-optimal plan
+    with b_p = b)."""
+    b, h, _, cin = x.shape
+    kh, kw, _, cout = w.shape
+    ho = (h - kh) // stride + 1
+    wo = (x.shape[2] - kw) // stride + 1
+    d_hat = lower(x, kh, kw, stride)                    # (B*Ho*Wo, khkwCin)
+    k_hat = w.reshape(kh * kw * cin, cout)              # no kernel replication
+    r_hat = d_hat @ k_hat                               # GEMM
+    return r_hat.reshape(b, ho, wo, cout)               # lifting

@@ -1,0 +1,226 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture x input-shape x mesh) combination with ShapeDtypeStruct
+stand-ins — no allocation — and record memory analysis, cost analysis and
+the collective schedule for the roofline (EXPERIMENTS.md §Dry-run/§Roofline).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only]
+Results: experiments/dryrun/<arch>__<shape>__<mesh>.json
+"""
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import INPUT_SHAPES, get_config, list_archs  # noqa: E402
+from repro.configs.base import TrainConfig                      # noqa: E402
+from repro.launch import steps as ST                            # noqa: E402
+from repro.launch.hlo_analysis import (Roofline, model_flops_6nd,  # noqa: E402
+                                       roofline_from_compiled)
+from repro.launch.mesh import make_production_mesh              # noqa: E402
+from repro.launch.params_util import (active_param_count,       # noqa: E402
+                                      param_bytes, param_count)
+from repro.sharding import rules as SH                          # noqa: E402
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+# grad-accum (microbatching) for train_4k, tuned so remat'd activations fit
+# HBM; inference shapes never accumulate.
+GRAD_ACCUM = {
+    "llama3-405b": 16,
+    "llama-3.2-vision-90b": 16,
+    "grok-1-314b": 16,
+    "deepseek-coder-33b": 8,
+    "qwen2-7b": 8,
+    "phi4-mini-3.8b": 8,
+    "qwen2-moe-a2.7b": 8,
+    "mamba2-2.7b": 8,
+    "recurrentgemma-2b": 8,
+    "whisper-base": 8,   # 51 GiB/chip of fp32 logit temporaries at accum=1
+}
+
+
+def _tokens_per_step(shape) -> float:
+    if shape.kind == "train":
+        return shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return shape.global_batch * shape.seq_len
+    return shape.global_batch  # decode: 1 token per sequence
+
+
+def lower_one(arch: str, shape_name: str, *, multi_pod: bool,
+              tc: TrainConfig = None, verbose: bool = True,
+              accum_override: int = None, seq_parallel: bool = False,
+              weight_stationary: bool = False, tag: str = ""):
+    """Returns a result dict (raises on lowering/compile failure)."""
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    if not ST.supports_shape(cfg, shape):
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "skipped",
+                "reason": "encdec has no 500k-token decode regime (DESIGN.md §5)"}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    accum = GRAD_ACCUM.get(arch, 1) if shape.kind == "train" else 1
+    if accum_override is not None and shape.kind == "train":
+        accum = accum_override
+    if tc is None:
+        tc = TrainConfig(grad_accum=accum)
+
+    pspecs = ST.params_specs(cfg)
+    p_shard = SH.params_shardings(pspecs, cfg, mesh,
+                                  decode_kv_hd=weight_stationary
+                                  and shape.kind == "decode")
+    bspecs = ST.batch_specs(cfg, shape, grad_accum=tc.grad_accum)
+    b_shard = SH.batch_shardings(bspecs, mesh,
+                                 batch_dim=1 if tc.grad_accum > 1 else 0)
+    t0 = time.time()
+
+    act_ctx = SH.activation_sharding(mesh, seq_parallel_attention=seq_parallel,
+                                     weight_stationary=weight_stationary)
+    with mesh, act_ctx:
+        if shape.kind == "train":
+            mspecs = jax.eval_shape(
+                lambda p: jax.tree.map(
+                    lambda x: jnp.zeros(x.shape, cfg.dtype("mom")), p), pspecs)
+            m_shard = SH.params_shardings(mspecs, cfg, mesh)
+            step = ST.make_train_step(cfg, tc, shape, grad_shardings=p_shard)
+            lowered = jax.jit(
+                step,
+                in_shardings=(p_shard, m_shard, b_shard),
+                out_shardings=(p_shard, m_shard, SH.replicated(mesh)),
+            ).lower(pspecs, mspecs, bspecs)
+        elif shape.kind == "prefill":
+            step = ST.make_prefill_step(cfg, shape)
+            lowered = jax.jit(
+                step, in_shardings=(p_shard, b_shard),
+            ).lower(pspecs, bspecs)
+        else:  # decode
+            cspecs = ST.cache_specs_struct(cfg, shape)
+            c_shard = SH.cache_shardings(cspecs, cfg, mesh,
+                                         batch=shape.global_batch)
+            step = ST.make_decode_step(cfg, shape)
+            lowered = jax.jit(
+                step,
+                in_shardings=(p_shard, c_shard, b_shard,
+                              SH.replicated(mesh)),
+                out_shardings=(SH.replicated(mesh), c_shard),
+            ).lower(pspecs, cspecs, bspecs, jax.ShapeDtypeStruct((), jnp.int32))
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    ma = compiled.memory_analysis()
+    n_total = param_count(pspecs)
+    n_active = active_param_count(pspecs, cfg)
+    pbytes = param_bytes(pspecs)
+    cache_bytes = 0.0
+    if shape.kind == "decode":
+        cspecs2 = ST.cache_specs_struct(cfg, shape)
+        cache_bytes = float(sum(
+            jnp.zeros((), l.dtype).itemsize * float(jnp.prod(jnp.array(l.shape)))
+            for l in jax.tree.leaves(cspecs2)))
+    from repro.launch.hlo_analysis import analytic_hbm_bytes
+    hbm = analytic_hbm_bytes(cfg, shape, chips, grad_accum=tc.grad_accum,
+                             params_bytes_global=pbytes,
+                             cache_bytes_global=cache_bytes)
+    roof = roofline_from_compiled(compiled, chips, hbm_bytes=hbm)
+    from repro.launch.hlo_parse import analyze_module
+    stats = analyze_module(compiled.as_text())
+    tokens = _tokens_per_step(shape)
+    # 6ND for training (fwd+bwd), 2ND for inference (fwd only)
+    model_flops = (6.0 if shape.kind == "train" else 2.0) * n_active * tokens
+
+    res = {
+        "arch": arch, "shape": shape_name, "variant": tag or "baseline",
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips, "status": "ok",
+        "seq_parallel": seq_parallel,
+        "grad_accum": tc.grad_accum,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "params_total": n_total, "params_active": n_active,
+        "param_bytes_global": param_bytes(pspecs),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "peak_per_chip_est": ma.argument_size_in_bytes
+                                 + ma.temp_size_in_bytes,
+        },
+        "roofline": roof.as_dict(),
+        "collectives": {"bytes": stats.collective_bytes,
+                        "count": stats.collective_counts},
+        "model_flops_global": model_flops,
+        "useful_flops_frac": (model_flops / chips) / roof.flops
+                             if roof.flops else None,
+    }
+    if verbose:
+        print(f"[{res['mesh']}] {arch} x {shape_name}: "
+              f"compile {res['compile_s']}s, "
+              f"mem/chip {(res['memory']['peak_per_chip_est'])/2**30:.2f} GiB, "
+              f"bottleneck {roof.bottleneck}, step {roof.step_time*1e3:.2f} ms")
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list_archs())
+    ap.add_argument("--shape", choices=sorted(INPUT_SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="run the 2x16x16 mesh (default 16x16)")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--accum", type=int, default=None,
+                    help="override grad accumulation (hillclimb variant)")
+    ap.add_argument("--seqpar", action="store_true",
+                    help="sequence-parallel attention variant")
+    ap.add_argument("--wstat", action="store_true",
+                    help="weight-stationary decode variant")
+    ap.add_argument("--tag", type=str, default="",
+                    help="variant tag appended to the output filename")
+    args = ap.parse_args()
+
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    archs = list_archs() if args.all or not args.arch else [args.arch]
+    shapes = sorted(INPUT_SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+                if args.tag:
+                    tag += f"__{args.tag}"
+                try:
+                    res = lower_one(arch, shape, multi_pod=mp,
+                                    accum_override=args.accum,
+                                    seq_parallel=args.seqpar,
+                                    weight_stationary=args.wstat,
+                                    tag=args.tag)
+                except Exception as e:  # a failure here is a bug in the system
+                    traceback.print_exc()
+                    res = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "status": "FAILED", "error": str(e)[-2000:]}
+                    failures.append(tag)
+                (OUT_DIR / f"{tag}.json").write_text(json.dumps(res, indent=2))
+    if failures:
+        print("FAILURES:", failures)
+        raise SystemExit(1)
+    print("all dry-runs OK")
+
+
+if __name__ == "__main__":
+    main()

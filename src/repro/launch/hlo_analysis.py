@@ -1,0 +1,167 @@
+"""Post-partitioning HLO analysis: collective bytes + roofline terms.
+
+``cost_analysis()`` has no collective volumes, so we parse the optimized
+(SPMD-partitioned) HLO from ``compiled.as_text()`` and sum the result-shape
+bytes of every collective op (all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %all-reduce.5 = f32[256,1024]{1,0} all-reduce(%dot), ...
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+_TUPLE_OP_RE = re.compile(
+    r"=\s*\(\s*(.+?)\)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_type: Dict[str, int]
+    count_by_type: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_type.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_type.values())
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    bytes_by: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    count_by: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if "-done(" in line:          # avoid double counting start/done pairs
+            continue
+        m = _OP_RE.search(line)
+        if m:
+            dtype, dims, op = m.groups()
+            bytes_by[op] += _shape_bytes(dtype, dims)
+            count_by[op] += 1
+            continue
+        m = _TUPLE_OP_RE.search(line)
+        if m:
+            shapes, op = m.groups()
+            total = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(shapes))
+            bytes_by[op] += total
+            count_by[op] += 1
+    return CollectiveStats(bytes_by, count_by)
+
+
+@dataclasses.dataclass
+class Roofline:
+    """Three-term roofline (per chip, seconds) — EXPERIMENTS.md §Roofline."""
+    flops: float                   # per-chip HLO flops
+    hbm_bytes: float               # per-chip bytes accessed
+    collective_bytes: float        # per-chip collective bytes moved
+    chips: int
+    peak_flops: float = 197e12     # TPU v5e bf16
+    hbm_bw: float = 819e9
+    link_bw: float = 50e9          # ICI per link
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / self.peak_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / self.hbm_bw
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / self.link_bw
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def as_dict(self) -> dict:
+        return {"flops": self.flops, "hbm_bytes": self.hbm_bytes,
+                "collective_bytes": self.collective_bytes, "chips": self.chips,
+                "t_compute": self.t_compute, "t_memory": self.t_memory,
+                "t_collective": self.t_collective,
+                "bottleneck": self.bottleneck, "step_time": self.step_time}
+
+
+def roofline_from_compiled(compiled, chips: int,
+                           hbm_bytes: Optional[float] = None) -> Roofline:
+    """Trip-count-aware roofline from the compiled artifact. XLA's
+    cost_analysis counts while bodies once, so FLOPs and collective bytes
+    come from the hlo_parse call-graph walk; the HBM term uses the analytic
+    traffic model when provided (cost_analysis 'bytes accessed' double counts
+    across fusions and also misses loop trips)."""
+    from repro.launch.hlo_parse import analyze_module
+    stats = analyze_module(compiled.as_text())
+    if hbm_bytes is None:
+        ca = compiled.cost_analysis()
+        hbm_bytes = float(ca.get("bytes accessed", 0.0))
+    return Roofline(flops=float(stats.flops),
+                    hbm_bytes=float(hbm_bytes),
+                    collective_bytes=float(stats.total_collective_bytes),
+                    chips=chips)
+
+
+def analytic_hbm_bytes(cfg, shape, chips: int, *, grad_accum: int = 1,
+                       params_bytes_global: float = 0.0,
+                       cache_bytes_global: float = 0.0) -> float:
+    """Per-chip HBM traffic model (the roofline memory term):
+
+    train:   3x params (fwd read, bwd read, update write) + 2x momentum +
+             saved activations written+read once each (remat recomputes
+             instead of storing, so only layer-boundary residuals count).
+    prefill: params read once + activations + cache write.
+    decode:  params read once (one token!) + full cache read + write.
+    """
+    act_dtype = cfg.dtype("compute").itemsize
+    L = max(cfg.num_layers, 1)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        act = tokens * cfg.d_model * act_dtype * L * 2.0
+        return (5.0 * params_bytes_global + act) / chips
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        act = tokens * cfg.d_model * act_dtype * L * 2.0
+        return (params_bytes_global + act + cache_bytes_global) / chips
+    # decode
+    return (params_bytes_global + 2.0 * cache_bytes_global
+            + shape.global_batch * cfg.d_model * act_dtype * L * 2.0) / chips
+
+
+def model_flops_6nd(num_params: float, tokens: float) -> float:
+    """MODEL_FLOPS = 6 * N * D (dense); pass N_active for MoE."""
+    return 6.0 * num_params * tokens

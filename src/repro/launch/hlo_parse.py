@@ -1,0 +1,242 @@
+"""Trip-count-aware analysis of optimized (post-SPMD) HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE, so for
+scan-over-layers models it understates FLOPs and collective bytes by the
+trip counts. This parser rebuilds the call graph (entry -> fusions/calls ->
+while bodies), extracts each loop's trip count from its condition
+computation, and accumulates:
+
+  - dot FLOPs (2 * M*N*K, from result shape x contracting dims)
+  - convolution FLOPs
+  - collective bytes by op type (all-gather / all-reduce / reduce-scatter /
+    all-to-all / collective-permute)
+
+each weighted by the product of enclosing trip counts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+)$")
+_SHAPE_RE = re.compile(r"^\(?([a-z0-9]+)\[([0-9,]*)\]")
+_SHAPES_ALL = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_CALL_RE = re.compile(r"(?:calls|body|condition|to_apply|branch_computations)="
+                      r"[{]?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)[}]?")
+_CONST_RE = re.compile(r"=\s*[su]\d+\[\]\s+constant\((\d+)\)")
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    return _shape_elems(dims) * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    lines: List[str]
+    param_shapes: Dict[str, str]
+
+
+def split_computations(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if cur is None:
+            m = _COMP_HDR.match(stripped)
+            if m and stripped.endswith("{"):
+                cur = Computation(m.group(1), [], {})
+        else:
+            if stripped == "}":
+                comps[cur.name] = cur
+                cur = None
+            else:
+                cur.lines.append(stripped)
+    return comps
+
+
+def _value_shapes(comp: Computation) -> Dict[str, Tuple[str, str]]:
+    """Map %name -> (dtype, dims) from def lines (first shape in the rhs)."""
+    shapes: Dict[str, Tuple[str, str]] = {}
+    for line in comp.lines:
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        s = _SHAPE_RE.match(rhs)
+        if s:
+            shapes[name] = (s.group(1), s.group(2))
+    return shapes
+
+
+def _dot_flops(line: str, shapes: Dict[str, Tuple[str, str]]) -> float:
+    """2 * prod(result_dims) * prod(contracting_dims of lhs)."""
+    m = _DEF_RE.match(line)
+    if not m:
+        return 0.0
+    rhs = m.group(2)
+    rs = _SHAPE_RE.match(rhs)
+    if not rs:
+        return 0.0
+    result_elems = _shape_elems(rs.group(2))
+    ops = re.search(r"\bdot\(\s*%?([\w.\-]+)", rhs)
+    if not ops:
+        return 0.0
+    lhs_name = ops.group(1)
+    lhs = shapes.get(lhs_name)
+    cdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rhs)
+    if lhs is None or cdims is None:
+        return 0.0
+    ldims = [int(d) for d in lhs[1].split(",")] if lhs[1] else []
+    k = 1
+    for idx in (cdims.group(1).split(",") if cdims.group(1) else []):
+        i = int(idx)
+        if i < len(ldims):
+            k *= ldims[i]
+    return 2.0 * result_elems * k
+
+
+def _conv_flops(line: str, shapes: Dict[str, Tuple[str, str]]) -> float:
+    m = _DEF_RE.match(line)
+    if not m:
+        return 0.0
+    rhs = m.group(2)
+    if " convolution(" not in rhs and not rhs.startswith("convolution("):
+        return 0.0
+    rs = _SHAPE_RE.match(rhs)
+    ops = re.search(r"convolution\(\s*%?([\w.\-]+)\s*,\s*%?([\w.\-]+)", rhs)
+    if not rs or not ops:
+        return 0.0
+    result_elems = _shape_elems(rs.group(2))
+    ker = shapes.get(ops.group(2))
+    if ker is None:
+        return 0.0
+    kdims = [int(d) for d in ker[1].split(",")] if ker[1] else []
+    # flops = 2 * out_elems * (kernel spatial x input channels) ~ prod(kdims)/Cout
+    kelems = 1
+    for d in kdims:
+        kelems *= d
+    cout = kdims[-1] if kdims else 1   # HWIO default from our models
+    return 2.0 * result_elems * max(kelems // max(cout, 1), 1)
+
+
+@dataclasses.dataclass
+class ModuleStats:
+    dot_flops: float
+    conv_flops: float
+    collective_bytes: Dict[str, float]
+    collective_counts: Dict[str, float]
+    trip_counts: Dict[str, int]
+
+    @property
+    def flops(self) -> float:
+        return self.dot_flops + self.conv_flops
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def _find_trip_count(cond: Computation) -> int:
+    consts = [int(c) for c in _CONST_RE.findall("\n".join(cond.lines))]
+    big = [c for c in consts if c > 1]
+    return max(big) if big else (max(consts) if consts else 1)
+
+
+def analyze_module(text: str) -> ModuleStats:
+    comps = split_computations(text)
+    entry = None
+    for name in comps:
+        pass
+    m = re.search(r"ENTRY\s+%?([\w.\-]+)", text)
+    entry = m.group(1) if m else next(iter(comps))
+
+    # accumulate multipliers over the call DAG
+    mult: Dict[str, float] = {name: 0.0 for name in comps}
+    mult[entry] = 1.0
+    order = [entry]
+    seen = {entry}
+    # BFS respecting call edges; loops in call graph don't exist in HLO
+    i = 0
+    while i < len(order):
+        cname = order[i]
+        i += 1
+        comp = comps[cname]
+        base = mult[cname]
+        for line in comp.lines:
+            wm = re.search(r"\bwhile\(", line)
+            body = re.search(r"body=%?([\w.\-]+)", line)
+            cond = re.search(r"condition=%?([\w.\-]+)", line)
+            if wm and body and cond and body.group(1) in comps:
+                trips = _find_trip_count(comps[cond.group(1)]) \
+                    if cond.group(1) in comps else 1
+                for callee, factor in ((body.group(1), trips),
+                                       (cond.group(1), trips + 1)):
+                    if callee in comps:
+                        mult[callee] += base * factor
+                        if callee not in seen:
+                            seen.add(callee)
+                            order.append(callee)
+                continue
+            cm = _CALL_RE.search(line)
+            if cm:
+                for callee in re.split(r",\s*", cm.group(1)):
+                    callee = callee.lstrip("%")
+                    if callee in comps:
+                        mult[callee] += base
+                        if callee not in seen:
+                            seen.add(callee)
+                            order.append(callee)
+
+    dot_flops = 0.0
+    conv_flops = 0.0
+    cbytes = {c: 0.0 for c in _COLLECTIVES}
+    ccount = {c: 0.0 for c in _COLLECTIVES}
+    trips: Dict[str, int] = {}
+    for name, comp in comps.items():
+        w = mult.get(name, 0.0)
+        if w <= 0:
+            continue
+        shapes = _value_shapes(comp)
+        for line in comp.lines:
+            if " dot(" in line or re.search(r"=\s*\S+\s+dot\(", line):
+                dot_flops += w * _dot_flops(line, shapes)
+            if "convolution(" in line:
+                conv_flops += w * _conv_flops(line, shapes)
+            for coll in _COLLECTIVES:
+                if re.search(rf"\b{coll}(?:-start)?\(", line):
+                    m2 = _DEF_RE.match(line)
+                    if not m2:
+                        continue
+                    rhs = m2.group(2)
+                    if rhs.startswith("("):
+                        total = sum(_shape_bytes(d, s) for d, s in
+                                    _SHAPES_ALL.findall(rhs.split(coll)[0]))
+                    else:
+                        rs = _SHAPE_RE.match(rhs)
+                        total = _shape_bytes(*rs.groups()) if rs else 0
+                    cbytes[coll] += w * total
+                    ccount[coll] += w
+                    break
+    return ModuleStats(dot_flops=dot_flops, conv_flops=conv_flops,
+                       collective_bytes=cbytes, collective_counts=ccount,
+                       trip_counts=trips)

@@ -1,0 +1,18 @@
+"""Production meshes. Functions (not module constants) so importing never
+touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16,16)=256 chips, ("data","model").
+    Multi-pod: (2,16,16)=512 chips, ("pod","data","model")."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(data: int = 2, model: int = 2):
+    """Small mesh for CPU tests (requires >= data*model host devices)."""
+    return jax.make_mesh((data, model), ("data", "model"))

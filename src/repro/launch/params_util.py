@@ -1,0 +1,35 @@
+"""Parameter counting (total and MoE-active) from eval_shape specs."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+
+def param_count(params_shapes) -> int:
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(params_shapes)))
+
+
+def param_bytes(params_shapes) -> int:
+    return int(sum(np.prod(l.shape) * l.dtype.itemsize
+                   for l in jax.tree.leaves(params_shapes)))
+
+
+def active_param_count(params_shapes, cfg: ArchConfig) -> int:
+    """MoE: per-token active params = non-expert params + top_k/E of routed
+    expert params (+ shared experts, always active)."""
+    if cfg.moe is None:
+        return param_count(params_shapes)
+    total = 0
+    routed = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params_shapes)[0]:
+        keys = [getattr(e, "key", None) for e in path]
+        n = int(np.prod(leaf.shape))
+        if any(k in ("w_gate", "w_up", "w_down") for k in keys) \
+                and "shared" not in keys and "mlp" not in keys \
+                and leaf.ndim >= 3:
+            routed += n
+        else:
+            total += n
+    return total + routed * cfg.moe.top_k // cfg.moe.num_experts

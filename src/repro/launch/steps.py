@@ -1,0 +1,149 @@
+"""Step factories (train / prefill / decode) + ShapeDtypeStruct input specs
+for the dry-run. Decode shapes lower ``decode_step`` (one token + cache),
+train lowers a full SGD-momentum update, prefill lowers forward+cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape, TrainConfig
+from repro.models import transformer as T
+
+# sliding window used for the long_500k sub-quadratic attention variant
+LONG_CONTEXT_WINDOW = 8192
+
+
+def effective_window(cfg: ArchConfig, shape: InputShape) -> Optional[int]:
+    """long_500k on attention-bearing archs runs the sliding-window variant
+    (sub-quadratic); other shapes use the config's native attention."""
+    if shape.name == "long_500k" and cfg.arch_type in ("dense", "moe", "vlm"):
+        return LONG_CONTEXT_WINDOW
+    return cfg.sliding_window
+
+
+def supports_shape(cfg: ArchConfig, shape: InputShape) -> bool:
+    """whisper-base: enc-dec over <=30s audio has no 500k-token decode regime
+    (DESIGN.md §5)."""
+    if cfg.arch_type == "encdec" and shape.name == "long_500k":
+        return False
+    return True
+
+
+def batch_specs(cfg: ArchConfig, shape: InputShape, *, grad_accum: int = 1):
+    """ShapeDtypeStructs for the data inputs of the step (weak-type-correct,
+    shardable, no allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    sd = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        if grad_accum > 1:
+            assert B % grad_accum == 0
+            b = B // grad_accum
+            batch = {"tokens": sd((grad_accum, b, S), jnp.int32),
+                     "labels": sd((grad_accum, b, S), jnp.int32)}
+            lead = (grad_accum, b)
+        else:
+            batch = {"tokens": sd((B, S), jnp.int32),
+                     "labels": sd((B, S), jnp.int32)}
+            lead = (B,)
+    elif shape.kind == "prefill":
+        batch = {"tokens": sd((B, S), jnp.int32)}
+        lead = (B,)
+    else:  # decode: one new token
+        batch = {"tokens": sd((B, 1), jnp.int32)}
+        lead = (B,)
+    # modality frontends are STUBS: precomputed embeddings of the right shape
+    if cfg.arch_type == "encdec":
+        batch["enc_emb"] = sd((*lead, cfg.encoder_seq, cfg.d_model),
+                              cfg.dtype("compute"))
+    if cfg.arch_type == "vlm":
+        batch["img_emb"] = sd((*lead, cfg.num_image_tokens, cfg.d_model),
+                              cfg.dtype("compute"))
+    return batch
+
+
+def params_specs(cfg: ArchConfig, seed: int = 0):
+    return jax.eval_shape(
+        lambda k: T.init_params(k, cfg), jax.random.PRNGKey(seed))
+
+
+def cache_specs_struct(cfg: ArchConfig, shape: InputShape):
+    window = effective_window(cfg, shape)
+    return jax.eval_shape(
+        functools.partial(T.init_cache, cfg, shape.global_batch,
+                          shape.seq_len, window))
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ArchConfig, tc: TrainConfig, shape: InputShape,
+                    *, attn_impl: str = "xla", grad_shardings=None):
+    """Synchronous (g=1) data-parallel SGD-momentum step with optional
+    gradient-accumulation microbatching. ``grad_shardings`` (same tree as
+    params) pins the accumulator layout — without it GSPMD replicates the
+    fp32 accumulator per chip and all-reduces every microstep. For g>1 see
+    repro.core.async_sgd.make_grouped_train_step."""
+    window = effective_window(cfg, shape)
+
+    def loss_fn(params, batch):
+        return T.lm_loss(params, batch, cfg, attn_impl=attn_impl,
+                         window=window)
+
+    def _constrain(tree):
+        if grad_shardings is None:
+            return tree
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree,
+                            grad_shardings)
+
+    def train_step(params, mom, batch):
+        if tc.grad_accum > 1:
+            def acc(carry, micro):
+                l, g = jax.value_and_grad(loss_fn)(params, micro)
+                g = _constrain(g)
+                return (carry[0] + l,
+                        _constrain(jax.tree.map(jnp.add, carry[1], g))), None
+            zeros = _constrain(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            (loss, grads), _ = jax.lax.scan(acc, (jnp.float32(0.0), zeros),
+                                            batch)
+            loss = loss / tc.grad_accum
+            grads = jax.tree.map(lambda g: g / tc.grad_accum, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        from repro.optim.sgd import sgd_update
+        params, mom = sgd_update(params, grads, mom, lr=tc.learning_rate,
+                                 momentum=tc.momentum,
+                                 weight_decay=tc.weight_decay)
+        return params, mom, loss
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, shape: InputShape,
+                      *, attn_impl: str = "xla"):
+    window = effective_window(cfg, shape)
+
+    def prefill_step(params, batch):
+        logits, _, cache = T.forward(params, batch, cfg, return_cache=True,
+                                     attn_impl=attn_impl, window=window)
+        return logits[:, -1:, :], cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, shape: InputShape):
+    window = effective_window(cfg, shape)
+
+    def decode_step(params, cache, batch, pos):
+        logits, cache = T.decode_step(params, cache, batch["tokens"], pos,
+                                      cfg, window=window)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], cache
+
+    return decode_step

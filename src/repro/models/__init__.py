@@ -1,0 +1,3 @@
+from repro.models import cnn, layers, moe, rglru, ssm, transformer
+
+__all__ = ["cnn", "layers", "moe", "rglru", "ssm", "transformer"]

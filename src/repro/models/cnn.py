@@ -1,0 +1,128 @@
+"""The paper's own CNN workloads (CaffeNet/AlexNet-family, LeNet) with the
+conv-phase / FC-phase split made explicit (paper §II-C, Fig. 1) — the split
+drives the hardware-efficiency model and the merged-FC ("sync head") update.
+
+Conv layers run through ``repro.kernels.lowering_conv.ops`` when
+``conv_impl="lowering"`` (paper §III batched lowering, Pallas on TPU) or
+``jax.lax.conv_general_dilated`` (XLA) otherwise.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    features: int
+    kernel: int
+    stride: int = 1
+    pool: int = 1          # max-pool window/stride after the conv (1 = none)
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    name: str
+    image_size: int
+    in_channels: int
+    num_classes: int
+    convs: Tuple[ConvSpec, ...]
+    fc_dims: Tuple[int, ...]
+    conv_impl: str = "xla"            # xla | lowering | lowering_interpret
+    source: str = ""
+
+
+LENET = CNNConfig(
+    name="lenet", image_size=28, in_channels=1, num_classes=10,
+    convs=(ConvSpec(20, 5, pool=2), ConvSpec(50, 5, pool=2)),
+    fc_dims=(500,),
+    source="LeCun 1998 / Caffe MNIST tutorial (paper Fig. 8)")
+
+# CaffeNet geometry (paper's main workload), scaled-down option for CPU runs.
+CAFFENET = CNNConfig(
+    name="caffenet", image_size=227, in_channels=3, num_classes=1000,
+    convs=(ConvSpec(96, 11, stride=4, pool=2), ConvSpec(256, 5, pool=2),
+           ConvSpec(384, 3), ConvSpec(384, 3), ConvSpec(256, 3, pool=2)),
+    fc_dims=(4096, 4096),
+    source="Krizhevsky 2012 / BVLC reference CaffeNet (paper §VI-A)")
+
+CIFAR_NET = CNNConfig(
+    name="cifarnet", image_size=32, in_channels=3, num_classes=10,
+    convs=(ConvSpec(32, 5, pool=2), ConvSpec(32, 5, pool=2), ConvSpec(64, 5, pool=2)),
+    fc_dims=(64,),
+    source="Caffe CIFAR-10 tutorial (paper Fig. 8)")
+
+
+def _conv(x, w, b, stride, impl):
+    if impl.startswith("lowering"):
+        from repro.kernels.lowering_conv import ops as lc_ops
+        if impl.endswith("interpret"):    # Pallas kernel, interpret on CPU
+            y = lc_ops.lowering_conv(x, w, stride=stride, interpret=True)
+        else:                             # same algorithm through XLA
+            y = lc_ops.lowering_conv_xla(x, w, stride=stride)
+    else:
+        y = jax.lax.conv_general_dilated(
+            x, w, window_strides=(stride, stride), padding="VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + b
+
+
+def _maxpool(x, k):
+    if k == 1:
+        return x
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, k, k, 1), (1, k, k, 1), "VALID")
+
+
+def init_params(key, cfg: CNNConfig):
+    """Returns {"conv": [...], "fc": [...]} — the paper's two phases."""
+    keys = jax.random.split(key, len(cfg.convs) + len(cfg.fc_dims) + 1)
+    conv_params = []
+    c_in = cfg.in_channels
+    size = cfg.image_size
+    for i, spec in enumerate(cfg.convs):
+        w = jax.random.normal(keys[i], (spec.kernel, spec.kernel, c_in,
+                                        spec.features)) * 0.01
+        conv_params.append({"w": w, "b": jnp.zeros((spec.features,))})
+        size = (size - spec.kernel) // spec.stride + 1
+        size = size // spec.pool if spec.pool > 1 else size
+        c_in = spec.features
+    flat = size * size * c_in
+    fc_params = []
+    dims = (flat,) + tuple(cfg.fc_dims) + (cfg.num_classes,)
+    for j in range(len(dims) - 1):
+        k = keys[len(cfg.convs) + j]
+        w = jax.random.normal(k, (dims[j], dims[j + 1])) * (dims[j] ** -0.5)
+        fc_params.append({"w": w, "b": jnp.zeros((dims[j + 1],))})
+    return {"conv": conv_params, "fc": fc_params}
+
+
+def forward(params, images, cfg: CNNConfig):
+    """images: (B,H,W,C) -> logits (B,num_classes)."""
+    x = images
+    for spec, p in zip(cfg.convs, params["conv"]):
+        x = jax.nn.relu(_conv(x, p["w"], p["b"], spec.stride, cfg.conv_impl))
+        x = _maxpool(x, spec.pool)
+    x = x.reshape(x.shape[0], -1)
+    for i, p in enumerate(params["fc"]):
+        x = x @ p["w"] + p["b"]
+        if i < len(params["fc"]) - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def loss_fn(params, batch, cfg: CNNConfig):
+    logits = forward(params, batch["images"], cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, batch["labels"][:, None], axis=-1).mean()
+
+
+def head_filter(path) -> bool:
+    """True for FC-phase params — the paper's merged-FC servers update these
+    synchronously (zero staleness)."""
+    return any(getattr(p, "key", getattr(p, "name", None)) == "fc"
+               or (isinstance(p, jax.tree_util.DictKey) and p.key == "fc")
+               for p in path)

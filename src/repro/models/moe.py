@@ -1,0 +1,129 @@
+"""Mixture-of-Experts layer: top-k router with capacity-based dispatch
+(Switch/GShard style), optional shared experts (Qwen-MoE), and router
+load-balance auxiliary loss.
+
+TPU-shaped implementation choices:
+  - dispatch is **batch-local and sequence-chunked** (lax.scan over chunks of
+    ``MOE_CHUNK`` tokens): the position-in-expert cumsum never crosses a
+    shard boundary, so under batch sharding the whole dispatch lowers
+    without cross-chip scans, and the (tokens, E, capacity) one-hots stay
+    VMEM-scale. Capacity is capped at ``MAX_CAPACITY`` (token dropping,
+    standard for capacity-factor MoE).
+  - expert FFN hidden dim is the tensor-sharded axis (always divisible by
+    the model axis, unlike expert count: 60 experts vs 16-wide axis).
+Expert-parallel all-to-all is a recorded beyond-paper optimization candidate
+(EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+CAPACITY_FACTOR = 1.25
+MOE_CHUNK = 4096
+MAX_CAPACITY = 1024
+
+
+def init_moe(key, cfg: ArchConfig):
+    assert cfg.moe is not None
+    m = cfg.moe
+    d, f, e = cfg.d_model, m.d_ff_expert, m.num_experts
+    dt = cfg.dtype("param")
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": (jax.random.normal(ks[0], (d, e)) * d ** -0.5).astype(jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (e, d, f)) * d ** -0.5).astype(dt),
+        "w_up": (jax.random.normal(ks[2], (e, d, f)) * d ** -0.5).astype(dt),
+        "w_down": (jax.random.normal(ks[3], (e, f, d)) * f ** -0.5).astype(dt),
+    }
+    if m.num_shared_experts > 0:
+        fs = m.num_shared_experts * f
+        ks2 = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": (jax.random.normal(ks2[0], (d, fs)) * d ** -0.5).astype(dt),
+            "w_up": (jax.random.normal(ks2[1], (d, fs)) * d ** -0.5).astype(dt),
+            "w_down": (jax.random.normal(ks2[2], (fs, d)) * fs ** -0.5).astype(dt),
+        }
+    return p
+
+
+def capacity(tokens_per_row: int, cfg: ArchConfig) -> int:
+    m = cfg.moe
+    c = int(m.top_k * tokens_per_row * CAPACITY_FACTOR / m.num_experts)
+    return max(1, min(c, MAX_CAPACITY))
+
+
+def _chunk_moe(p, xk, cfg: ArchConfig):
+    """One chunk. xk: (B, L, D) -> (y, aux_stats)."""
+    m = cfg.moe
+    cd = cfg.dtype("compute")
+    b, L, d = xk.shape
+    e, k = m.num_experts, m.top_k
+    cap = capacity(L, cfg)
+
+    logits = (xk.astype(jnp.float32) @ p["router"])          # (B,L,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)            # (B,L,k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(axis=-1, keepdims=True), 1e-9)
+
+    from repro.sharding.rules import constrain_batch
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.int32)    # (B,L,k,E)
+    flat = constrain_batch(onehot.reshape(b, L * k, e))
+    # position within each expert's buffer (cumsum stays inside the row ->
+    # batch-local under sharding)
+    pos = jnp.cumsum(flat, axis=1) * flat - 1                # (B,Lk,E)
+    keep = (pos < cap) & (flat > 0)
+    pos_oh = jax.nn.one_hot(pos, cap, dtype=cd) * keep[..., None]  # (B,Lk,E,C)
+    pos_oh = constrain_batch(pos_oh)
+    gates_flat = jnp.repeat(gate_vals.reshape(b, L, k), 1, axis=-1) \
+                    .reshape(b, L * k).astype(cd)
+    x_rep = constrain_batch(jnp.repeat(xk, k, axis=1))       # (B,Lk,D)
+
+    xin = constrain_batch(
+        jnp.einsum("btec,btd->becd", pos_oh, x_rep))         # (B,E,C,D)
+    gate = jax.nn.silu(jnp.einsum("becd,edf->becf", xin, p["w_gate"].astype(cd)))
+    up = jnp.einsum("becd,edf->becf", xin, p["w_up"].astype(cd))
+    out = jnp.einsum("becf,efd->becd", gate * up, p["w_down"].astype(cd))
+    # combine back: weight each (token, choice) by its gate
+    y = jnp.einsum("btec,bt,becd->btd", pos_oh, gates_flat, out)
+    y = y.reshape(b, L, k, d).sum(axis=2)
+
+    # GShard load-balance stats (summed over chunks by the caller)
+    frac_tokens = onehot.sum(axis=2).astype(jnp.float32).mean(axis=(0, 1))
+    mean_prob = probs.mean(axis=(0, 1))
+    return y, (frac_tokens, mean_prob)
+
+
+def moe_forward(p, x, cfg: ArchConfig, chunk: int = MOE_CHUNK):
+    """x: (B, S, D). Returns (y, aux_loss)."""
+    m = cfg.moe
+    cd = cfg.dtype("compute")
+    b, s, d = x.shape
+    L = min(chunk, s)
+    e = m.num_experts
+
+    if s % L or s == L:
+        y, (ft, mp) = _chunk_moe(p, x, cfg)
+        aux = e * jnp.sum(ft * mp)
+    else:
+        nc = s // L
+        xc = x.reshape(b, nc, L, d).transpose(1, 0, 2, 3)
+
+        def body(carry, xk):
+            y, (ft, mp) = _chunk_moe(p, xk, cfg)
+            return (carry[0] + ft, carry[1] + mp), y
+        (ft, mp), yc = jax.lax.scan(
+            body, (jnp.zeros((e,)), jnp.zeros((e,))), xc)
+        y = yc.transpose(1, 0, 2, 3).reshape(b, s, d)
+        aux = e * jnp.sum((ft / nc) * (mp / nc))
+
+    if "shared" in p:
+        sp = p["shared"]
+        xt = x.reshape(b * s, d)
+        h = jax.nn.silu(xt @ sp["w_gate"].astype(cd)) * (xt @ sp["w_up"].astype(cd))
+        y = y + (h @ sp["w_down"].astype(cd)).reshape(b, s, d)
+
+    return y, aux * m.router_aux_weight

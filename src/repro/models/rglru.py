@@ -1,0 +1,101 @@
+"""Griffin / RecurrentGemma recurrent block: gated temporal conv + RG-LRU.
+[arXiv:2402.19427]
+
+RG-LRU:  a_t = exp(-c * softplus(Lambda) * sigmoid(W_a x_t))
+         h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (sigmoid(W_x x_t) * x_t)
+
+Training/prefill evaluates the linear recurrence with an associative scan
+(log-depth on TPU); decode is the O(1) step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+RG_C = 8.0
+
+
+def _d_rnn(cfg: ArchConfig) -> int:
+    return cfg.hybrid.d_rnn or cfg.d_model
+
+
+def init_rglru_block(key, cfg: ArchConfig):
+    d = cfg.d_model
+    dr = _d_rnn(cfg)
+    k = cfg.hybrid.conv_width
+    ks = jax.random.split(key, 6)
+    dt = cfg.dtype("param")
+    return {
+        "w_gate_branch": (jax.random.normal(ks[0], (d, dr)) * d ** -0.5).astype(dt),
+        "w_rec_in": (jax.random.normal(ks[1], (d, dr)) * d ** -0.5).astype(dt),
+        "conv_w": (jax.random.normal(ks[2], (k, dr)) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((dr,), dtype=dt),
+        "w_a": (jax.random.normal(ks[3], (dr, dr)) * dr ** -0.5).astype(dt),
+        "w_x": (jax.random.normal(ks[4], (dr, dr)) * dr ** -0.5).astype(dt),
+        "lambda_raw": jnp.full((dr,), 0.65, dtype=jnp.float32),
+        "w_out": (jax.random.normal(ks[5], (dr, d)) * dr ** -0.5).astype(dt),
+    }
+
+
+def _rg_lru_coeffs(p, x, cd):
+    """x: (..., d_rnn) conv output. Returns (a, b) of h = a*h_prev + b."""
+    r = jax.nn.sigmoid((x @ p["w_a"].astype(cd)).astype(jnp.float32))
+    i = jax.nn.sigmoid((x @ p["w_x"].astype(cd)).astype(jnp.float32))
+    log_a = -RG_C * jax.nn.softplus(p["lambda_raw"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-8)) \
+        * (i * x.astype(jnp.float32))
+    return a, b
+
+
+def _causal_conv(x, w, b, cd):
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[i].astype(cd) for i in range(k))
+    return out + b.astype(cd)
+
+
+def rglru_forward(p, u, cfg: ArchConfig, state=None):
+    """Full-sequence recurrent block. u: (B,S,D). Returns (y, final_state)."""
+    cd = cfg.dtype("compute")
+    gate = jax.nn.gelu(u @ p["w_gate_branch"].astype(cd))
+    x = u @ p["w_rec_in"].astype(cd)
+    x = _causal_conv(x, p["conv_w"], p["conv_b"], cd)
+    a, bb = _rg_lru_coeffs(p, x, cd)
+    if state is not None:
+        # fold the incoming state into the first step
+        bb = bb.at[:, 0, :].add(a[:, 0, :] * state)
+
+    def op(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(op, (a, bb), axis=1)
+    y = (h.astype(cd) * gate) @ p["w_out"].astype(cd)
+    return y, h[:, -1, :]
+
+
+def init_rglru_cache(batch: int, cfg: ArchConfig):
+    dr = _d_rnn(cfg)
+    return {
+        "h": jnp.zeros((batch, dr), dtype=jnp.float32),
+        "conv": jnp.zeros((batch, cfg.hybrid.conv_width - 1, dr),
+                          dtype=cfg.dtype("compute")),
+    }
+
+
+def rglru_decode(p, u, cache, cfg: ArchConfig):
+    """Single-token step. u: (B,1,D)."""
+    cd = cfg.dtype("compute")
+    gate = jax.nn.gelu(u @ p["w_gate_branch"].astype(cd))
+    x = u @ p["w_rec_in"].astype(cd)
+    hist = jnp.concatenate([cache["conv"], x.astype(cache["conv"].dtype)], axis=1)
+    w = p["conv_w"].astype(cd)
+    xt = (hist * w[None]).sum(axis=1, keepdims=True) + p["conv_b"].astype(cd)
+    a, bb = _rg_lru_coeffs(p, xt, cd)
+    h = a[:, 0, :] * cache["h"] + bb[:, 0, :]
+    y = (h[:, None, :].astype(cd) * gate) @ p["w_out"].astype(cd)
+    return y, {"h": h, "conv": hist[:, 1:, :]}

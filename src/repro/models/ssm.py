@@ -1,0 +1,160 @@
+"""Mamba-2 SSD (state-space duality) block. [arXiv:2405.21060]
+
+Training/prefill uses the chunked SSD algorithm (lax.scan over chunks with an
+(H, P, N) carried state; intra-chunk terms as dense einsums — the "dual"
+attention-like form that feeds the MXU). Decode is the O(1) single-step
+recurrence. ngroups = 1 (B/C shared across heads).
+
+Recurrence per head (state h in R^{P x N}):
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * x_t B_t^T
+    y_t = h_t C_t + D * x_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = d_inner // s.head_dim
+    d_conv = d_inner + 2 * s.state_dim   # conv runs over (x, B, C)
+    return d_inner, nheads, d_conv
+
+
+def init_ssm(key, cfg: ArchConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, nheads, d_conv = _dims(cfg)
+    proj_out = 2 * d_inner + 2 * s.state_dim + nheads   # z, x, B, C, dt
+    ks = jax.random.split(key, 5)
+    dt = cfg.dtype("param")
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, proj_out)) * d ** -0.5).astype(dt),
+        "conv_w": (jax.random.normal(ks[1], (s.conv_width, d_conv)) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((d_conv,), dtype=dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads)).astype(jnp.float32),
+        "D": jnp.ones((nheads,), dtype=jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), dtype=jnp.float32),
+        "out_proj": (jax.random.normal(ks[2], (d_inner, d)) * d_inner ** -0.5).astype(dt),
+    }
+
+
+def _split_proj(p, u, cfg: ArchConfig):
+    s = cfg.ssm
+    d_inner, nheads, _ = _dims(cfg)
+    cd = cfg.dtype("compute")
+    proj = u @ p["in_proj"].astype(cd)
+    z, xbc, dt_raw = jnp.split(
+        proj, [d_inner, 2 * d_inner + 2 * s.state_dim], axis=-1)
+    return z, xbc, dt_raw
+
+
+def _causal_conv(xbc, w, b, cd):
+    """Depthwise causal conv over time. xbc: (B,S,C); w: (K,C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i].astype(cd) for i in range(k))
+    return jax.nn.silu(out + b.astype(cd))
+
+
+def ssd_scan(x, dt, A, B, C, chunk, h0=None):
+    """Chunked SSD. x: (B,S,H,P); dt: (B,S,H); A: (H,) (positive, decay =
+    exp(-dt*A)); B, C: (B,S,N). Returns (y, h_final)."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    L = min(chunk, s)
+    assert s % L == 0, f"seq {s} not divisible by chunk {L}"
+    nc = s // L
+    xc = x.reshape(b, nc, L, h, p)
+    dtc = dt.reshape(b, nc, L, h)
+    Bc = B.reshape(b, nc, L, n)
+    Cc = C.reshape(b, nc, L, n)
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), dtype=jnp.float32)
+
+    def step(hprev, inp):
+        xk, dtk, Bk, Ck = inp                      # (B,L,H,P),(B,L,H),(B,L,N)
+        a = (-dtk * A).astype(jnp.float32)         # (B,L,H) log decay
+        cum = jnp.cumsum(a, axis=1)                # inclusive
+        xdt = (xk * dtk[..., None]).astype(jnp.float32)
+        # intra-chunk (the "dual" quadratic form, L x L); mask inside the exp
+        # so upper-triangle entries never overflow (exp(+big) * 0 = NaN).
+        tri = jnp.tril(jnp.ones((L, L), dtype=bool))[None, :, :, None]
+        ldiff = cum[:, :, None, :] - cum[:, None, :, :]             # (B,L,L,H)
+        decay = jnp.exp(jnp.where(tri, ldiff, -jnp.inf))
+        cb = jnp.einsum("bln,bsn->bls", Ck.astype(jnp.float32),
+                        Bk.astype(jnp.float32))
+        y_intra = jnp.einsum("bls,blsh,bshp->blhp", cb, decay, xdt)
+        # inter-chunk from carried state
+        y_inter = jnp.einsum("bln,blh,bhpn->blhp", Ck.astype(jnp.float32),
+                             jnp.exp(cum), hprev)
+        # state update
+        sdecay = jnp.exp(cum[:, -1:, :] - cum)                      # (B,L,H)
+        hnew = (jnp.exp(cum[:, -1, :])[:, :, None, None] * hprev
+                + jnp.einsum("blh,bln,blhp->bhpn", sdecay,
+                             Bk.astype(jnp.float32), xdt))
+        return hnew, (y_intra + y_inter).astype(x.dtype)
+
+    inputs = (xc.transpose(1, 0, 2, 3, 4), dtc.transpose(1, 0, 2, 3),
+              Bc.transpose(1, 0, 2, 3), Cc.transpose(1, 0, 2, 3))
+    hf, yc = jax.lax.scan(step, h0, inputs)
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p)
+    return y, hf
+
+
+def ssm_forward(p, u, cfg: ArchConfig, h0=None):
+    """Full-sequence SSD block. u: (B,S,D). Returns (y, h_final)."""
+    s = cfg.ssm
+    d_inner, nheads, _ = _dims(cfg)
+    cd = cfg.dtype("compute")
+    z, xbc, dt_raw = _split_proj(p, u, cfg)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"], cd)
+    x, B, C = jnp.split(xbc, [d_inner, d_inner + s.state_dim], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = jnp.exp(p["A_log"])
+    xh = x.reshape(*x.shape[:2], nheads, s.head_dim)
+    y, hf = ssd_scan(xh, dt, A, B, C, s.chunk, h0=h0)
+    y = y + p["D"][:, None].astype(cd) * xh
+    y = y.reshape(*u.shape[:2], d_inner)
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"].astype(cd), hf
+
+
+def init_ssm_cache(batch: int, cfg: ArchConfig):
+    s = cfg.ssm
+    d_inner, nheads, d_conv = _dims(cfg)
+    return {
+        "h": jnp.zeros((batch, nheads, s.head_dim, s.state_dim), dtype=jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_width - 1, d_conv),
+                          dtype=cfg.dtype("compute")),
+    }
+
+
+def ssm_decode(p, u, cache, cfg: ArchConfig):
+    """Single-token step. u: (B,1,D). Returns (y, new_cache)."""
+    s = cfg.ssm
+    d_inner, nheads, _ = _dims(cfg)
+    cd = cfg.dtype("compute")
+    z, xbc, dt_raw = _split_proj(p, u, cfg)
+    # update causal-conv ring: cache holds the previous K-1 inputs
+    hist = jnp.concatenate([cache["conv"], xbc.astype(cache["conv"].dtype)], axis=1)
+    w = p["conv_w"].astype(cd)
+    conv = (hist * w[None]).sum(axis=1, keepdims=True) + p["conv_b"].astype(cd)
+    xbc_t = jax.nn.silu(conv)
+    new_conv = hist[:, 1:, :]
+    x, B, C = jnp.split(xbc_t, [d_inner, d_inner + s.state_dim], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B,H)
+    A = jnp.exp(p["A_log"])
+    xh = x.reshape(x.shape[0], nheads, s.head_dim).astype(jnp.float32)
+    decay = jnp.exp(-dt * A)[:, :, None, None]                       # (B,H,1,1)
+    inject = jnp.einsum("bh,bhp,bn->bhpn", dt, xh, B[:, 0].astype(jnp.float32))
+    h = decay * cache["h"] + inject
+    y = jnp.einsum("bhpn,bn->bhp", h, C[:, 0].astype(jnp.float32))
+    y = y + p["D"][:, None] * xh
+    y = y.reshape(u.shape[0], 1, d_inner).astype(cd)
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"].astype(cd), {"h": h, "conv": new_conv}

@@ -1,0 +1,3 @@
+from repro.optim.sgd import init_momentum, sgd_update
+
+__all__ = ["init_momentum", "sgd_update"]

@@ -1,0 +1,35 @@
+"""SGD with momentum exactly as paper eq. (3)-(4):
+
+    V <- mu * V - eta * (grad + lambda * W)
+    W <- W + V
+
+Momentum buffers may live in a reduced dtype (ZeRO-style footprint control
+for the very large assigned archs)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_momentum(params, dtype=None):
+    return jax.tree.map(
+        lambda p: jnp.zeros_like(p, dtype=dtype or p.dtype), params)
+
+
+def sgd_update(params, grads, momentum_buf, *, lr, momentum=0.0,
+               weight_decay=0.0):
+    """One paper-eq-(3)/(4) update. Returns (new_params, new_momentum)."""
+    def upd(p, g, v):
+        g32 = g.astype(jnp.float32)
+        if weight_decay:
+            g32 = g32 + weight_decay * p.astype(jnp.float32)
+        v_new = momentum * v.astype(jnp.float32) - lr * g32
+        p_new = p.astype(jnp.float32) + v_new
+        return p_new.astype(p.dtype), v_new.astype(v.dtype)
+
+    out = jax.tree.map(upd, params, grads, momentum_buf)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_mom = jax.tree.map(lambda t: t[1], out,
+                           is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, new_mom

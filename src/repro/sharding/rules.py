@@ -1,0 +1,307 @@
+"""Logical sharding rules: param / batch / cache pytrees -> PartitionSpecs.
+
+Megatron/FSDP hybrid:
+  - tensor axis ("model"): preferred per-leaf dimension by param name
+    (attention heads, FFN hidden, vocab), falling back to the largest
+    divisible dim;
+  - fsdp axes ("data" [+ "pod"]): largest remaining divisible dim.
+Every rule checks divisibility, so the same code shards whisper-base
+(d=512, 8 heads) and llama3-405b (d=16384, 128 heads) on a 16-wide tensor
+axis without per-arch tables.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# preferred tensor-sharded dim (by trailing param name), tried in order
+TENSOR_PREF: Dict[str, Tuple[int, ...]] = {
+    "wq": (1,), "wk": (1,), "wv": (1,), "wo": (0,),
+    "bq": (0,), "bk": (0,), "bv": (0,),
+    "w_gate": (-1, 0), "w_up": (-1, 0), "w_down": (-2, -1),
+    "tok": (0, 1), "unembed": (1, 0),
+    "router": (1,),
+    "in_proj": (1,), "out_proj": (0,),
+    "w_gate_branch": (1,), "w_rec_in": (1,), "w_a": (1,), "w_x": (1,),
+    "w_out": (0,),
+    "w": (3, 0),     # CNN conv kernels (HWIO): shard Cout
+    "b": (0,),
+}
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        key = getattr(entry, "key", None)
+        if isinstance(key, str):
+            return key
+    return ""
+
+
+def param_spec(path, shape: Tuple[int, ...], mesh: Mesh, *,
+               tensor_axis: str = "model",
+               fsdp_axes: Tuple[str, ...] = ("data",),
+               num_stack_dims: int = 0,
+               decode_kv_hd: bool = False) -> P:
+    """Spec for one param leaf. ``num_stack_dims`` marks leading lax.scan
+    stacking dims (layers / super-blocks) that must stay unsharded."""
+    name = _leaf_name(path)
+    ndim = len(shape)
+    assign: Dict[int, object] = {}
+    tsize = _axis_size(mesh, tensor_axis)
+    body = list(range(num_stack_dims, ndim))
+
+    # 1-D body params (norm scales, biases, per-head scalars) are tiny:
+    # replicate. Sharding a norm scale over the tensor axis drags the whole
+    # residual stream into d-sharding (measured 15 TB/step of all-reduce).
+    if len(body) <= 1 and name not in ("tok",):
+        return P(*[None] * ndim)
+
+    def norm(d):
+        # TENSOR_PREF indices are relative to the UNSTACKED param layout;
+        # shift by the leading lax.scan stacking dims.
+        return (d + num_stack_dims) if d >= 0 else ndim + d
+
+    # tensor axis. Attention (and recurrence) weights are STRICT: shard the
+    # preferred (head/channel) dim or replicate — a greedy fallback onto the
+    # contraction dim turns every attention dot into a partial-sum
+    # all-reduce inside the KV-chunk loop (measured 788 GiB/step on
+    # qwen2-7b whose 28 heads don't divide the 16-wide axis; §Perf).
+    strict = name in ("wq", "wk", "wv", "wo", "bq", "bk", "bv",
+                      "w_a", "w_x", "conv_w", "conv_b")
+    tdim = None
+    prefs = [norm(d) for d in TENSOR_PREF.get(name, ())]
+    if decode_kv_hd and name in ("wq", "wk", "wv"):
+        # decode-only (§Perf): hd-dim sharding of the projections; the
+        # resulting score psums are tiny at Sq=1, while the alternative is
+        # re-gathering the weights every layer (23.6 GiB/step, llama3-405b)
+        prefs.append(ndim - 1)
+    if not strict:
+        prefs += sorted(body, key=lambda d: -shape[d])
+    for d in prefs:
+        if d in body and shape[d] % tsize == 0 and shape[d] >= tsize:
+            tdim = d
+            break
+    if tdim is not None and tsize > 1:
+        assign[tdim] = tensor_axis
+
+    # Embedding / unembedding: vocab on tensor axis ONLY. FSDP on d_model
+    # would shard the contraction dim of the logits matmul, which makes
+    # GSPMD all-reduce the (B,S,V) logits instead of gathering the weight —
+    # measured 5.7 GB/step per microbatch on qwen2-7b (EXPERIMENTS.md §Perf).
+    if name in ("tok", "unembed"):
+        return P(*[assign.get(d) for d in range(ndim)])
+
+    # fsdp axes on the largest remaining divisible dim
+    fsize = _axis_size(mesh, fsdp_axes)
+    if fsize > 1:
+        for d in sorted(body, key=lambda d: -shape[d]):
+            if d != tdim and shape[d] % fsize == 0 and shape[d] >= fsize:
+                assign[d] = fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0]
+                break
+    return P(*[assign.get(d) for d in range(ndim)])
+
+
+def _stack_dims(path, cfg) -> int:
+    """Leading scan-stacking dims for a param leaf given its tree path."""
+    keys = [getattr(e, "key", None) for e in path]
+    if "blocks" in keys or "enc" in keys or "rem" in keys:
+        return 1
+    if "super" in keys:
+        # hybrid "rec" and vlm "self" carry (n_super, per) stacking
+        return 2 if ("rec" in keys or "self" in keys) else 1
+    return 0
+
+
+def params_shardings(params_shapes, cfg, mesh: Mesh, *,
+                     tensor_axis: str = "model",
+                     fsdp_axes: Optional[Tuple[str, ...]] = None,
+                     decode_kv_hd: bool = False):
+    """NamedShardings for a params (or momentum) pytree of ShapeDtypeStructs."""
+    if fsdp_axes is None:
+        fsdp_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+    def one(path, leaf):
+        spec = param_spec(path, leaf.shape, mesh, tensor_axis=tensor_axis,
+                          fsdp_axes=fsdp_axes,
+                          num_stack_dims=_stack_dims(path, cfg),
+                          decode_kv_hd=decode_kv_hd)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_shapes)
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def batch_shardings(batch_shapes, mesh: Mesh, *, tensor_axis: str = "model",
+                    batch_dim: int = 0):
+    """Inputs: the batch dim (0, or 1 under grad-accum microbatching) over
+    (pod, data) when divisible; the trailing embedding dim of float
+    modality-stub inputs over tensor when divisible. Never shard the token
+    sequence dim."""
+    baxes = batch_axes(mesh)
+    bsize = _axis_size(mesh, baxes)
+    tsize = _axis_size(mesh, tensor_axis)
+
+    def one(leaf):
+        shape = leaf.shape
+        assign = {}
+        if (len(shape) > batch_dim and bsize > 1
+                and shape[batch_dim] % bsize == 0
+                and shape[batch_dim] >= bsize):
+            assign[batch_dim] = baxes if len(baxes) > 1 else baxes[0]
+        is_float = leaf.dtype.kind == "f"
+        if (is_float and len(shape) >= batch_dim + 3
+                and shape[-1] % tsize == 0
+                and shape[-1] >= tsize and tsize > 1):
+            assign[len(shape) - 1] = tensor_axis
+        return NamedSharding(mesh, P(*[assign.get(d) for d in range(len(shape))]))
+
+    return jax.tree.map(one, batch_shapes)
+
+
+# cache leaf name -> (batch_dim_from_end_strategy) handled generically below
+_CACHE_SEQ_NAMES = {"k", "v", "ck", "cv"}
+
+
+def cache_shardings(cache_shapes, cfg, mesh: Mesh, *, batch: int,
+                    tensor_axis: str = "model"):
+    """Decode-cache pytree: batch dim over data axes; for attention k/v the
+    ring/window dim over tensor when divisible; for SSM state the head dim
+    over tensor."""
+    baxes = batch_axes(mesh)
+    bsize = _axis_size(mesh, baxes)
+    tsize = _axis_size(mesh, tensor_axis)
+    baxes_val = baxes if len(baxes) > 1 else (baxes[0] if baxes else None)
+
+    def one(path, leaf):
+        name = _leaf_name(path)
+        shape = leaf.shape
+        assign = {}
+        # find the batch dim: first dim equal to `batch` after stack dims
+        bdim = None
+        for d, s in enumerate(shape):
+            if s == batch:
+                bdim = d
+                break
+        if (bdim is not None and bsize > 1 and batch % bsize == 0
+                and batch >= bsize):
+            assign[bdim] = baxes_val
+        if name in _CACHE_SEQ_NAMES and bdim is not None and tsize > 1:
+            # (..., B, W, K, hd): try window dim, then kv-head dim
+            for d in (bdim + 1, bdim + 2):
+                if d < len(shape) and d not in assign \
+                        and shape[d] % tsize == 0 and shape[d] >= tsize:
+                    assign[d] = tensor_axis
+                    break
+        elif name == "h" and bdim is not None and tsize > 1:
+            d = bdim + 1          # SSM/RG-LRU state: heads / channel dim
+            if d < len(shape) and shape[d] % tsize == 0 and shape[d] >= tsize:
+                assign[d] = tensor_axis
+        elif name == "conv" and bdim is not None and tsize > 1:
+            d = len(shape) - 1
+            if shape[d] % tsize == 0 and shape[d] >= tsize:
+                assign[d] = tensor_axis
+        return NamedSharding(mesh, P(*[assign.get(d) for d in range(len(shape))]))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints
+# ---------------------------------------------------------------------------
+# GSPMD sometimes drops the batch sharding inside nested scan bodies (e.g.
+# the chunked-attention KV loop: measured 12.5 TB/step of scores all-reduce
+# on qwen2-7b once the propagated batch sharding got lost). Model code calls
+# ``constrain_batch`` at block boundaries; it is a no-op unless a launcher
+# installs a mesh via ``activation_sharding``.
+
+import contextlib
+import contextvars
+
+_ACT_CTX = contextvars.ContextVar("repro_act_sharding", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, batch_axes_=None, *,
+                        seq_parallel_attention: bool = False,
+                        tensor_axis: str = "model",
+                        weight_stationary: bool = False):
+    axes = batch_axes_ if batch_axes_ is not None else batch_axes(mesh)
+    token = _ACT_CTX.set((mesh, axes, seq_parallel_attention, tensor_axis,
+                          weight_stationary))
+    try:
+        yield
+    finally:
+        _ACT_CTX.reset(token)
+
+
+def constrain_batch(x, batch_dim: int = 0):
+    """Pin activation ``x`` to be sharded on its batch dim over the data
+    axes (replicated elsewhere). No-op outside activation_sharding()."""
+    ctx = _ACT_CTX.get()
+    if ctx is None or not hasattr(x, "ndim"):
+        return x
+    mesh, axes = ctx[0], ctx[1]
+    size = _axis_size(mesh, axes)
+    if size <= 1 or x.ndim <= batch_dim or x.shape[batch_dim] % size:
+        return x
+    spec = [None] * x.ndim
+    spec[batch_dim] = tuple(axes) if len(axes) > 1 else axes[0]
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+def seq_parallel_enabled() -> bool:
+    ctx = _ACT_CTX.get()
+    return bool(ctx and ctx[2])
+
+
+def maybe_replicate_for_decode(x):
+    """Weight-stationary decode (§Perf hillclimb): decode activations are
+    tiny (B x 1 x d), so replicate them over the data axes and let the
+    FSDP-sharded weights stay put — partial outputs are all-reduced (MBs)
+    instead of gathering the weights (51 GiB/step on llama3-405b)."""
+    ctx = _ACT_CTX.get()
+    if not ctx or len(ctx) < 5 or not ctx[4] or not hasattr(x, "ndim"):
+        return x
+    mesh = ctx[0]
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*[None] * x.ndim)))
+
+
+def constrain_kv_seq(x, seq_dim: int = 1, batch_dim: int = 0):
+    """Sequence-parallel attention (§Perf hillclimb): shard K/V on the
+    sequence dim over the tensor axis; each chip scores all queries against
+    its KV slice (flash semantics distribute the softmax). Used when the
+    head count doesn't divide the tensor axis. Batch stays on data."""
+    ctx = _ACT_CTX.get()
+    if ctx is None or not hasattr(x, "ndim"):
+        return x
+    mesh, axes, _, taxis = ctx
+    tsize = _axis_size(mesh, taxis)
+    if tsize <= 1 or x.ndim <= seq_dim or x.shape[seq_dim] % tsize:
+        return x
+    spec = [None] * x.ndim
+    spec[seq_dim] = taxis
+    bsize = _axis_size(mesh, axes)
+    if bsize > 1 and x.shape[batch_dim] % bsize == 0:
+        spec[batch_dim] = tuple(axes) if len(axes) > 1 else axes[0]
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

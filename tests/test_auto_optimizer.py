@@ -1,0 +1,67 @@
+"""Algorithm 1 (automatic optimizer) + GP-EI baseline behaviour."""
+import numpy as np
+import pytest
+
+from repro.core import hardware_model as hm
+from repro.core.auto_optimizer import algorithm1, cold_start, grid_search
+from repro.core.bayesian import gp_ei_minimize
+from repro.core.workload import init_state, make_runner, mlp_classify
+
+
+@pytest.fixture(scope="module")
+def runner_state():
+    wl = mlp_classify()
+    return make_runner(wl, seed=0), init_state(wl, seed=0)
+
+
+def test_cold_start_finds_converging_eta(runner_state):
+    runner, state = runner_state
+    mu, eta, loss = cold_start(runner, state, probe_steps=40)
+    assert mu == 0.9
+    assert eta in (0.1, 0.01, 0.001, 0.0001, 0.00001)
+    assert np.isfinite(loss)
+
+
+def test_grid_search_picks_finite_best(runner_state):
+    runner, state = runner_state
+    mu, eta, loss = grid_search(runner, state, g=4, etas=(0.1, 0.01),
+                                mus=(0.0, 0.3, 0.6, 0.9), probe_steps=40)
+    assert np.isfinite(loss)
+    assert 0.0 <= mu <= 0.9
+
+
+def test_algorithm1_end_to_end(runner_state):
+    runner, state = runner_state
+    res = algorithm1(runner, state, n_devices=16, epochs=2, epoch_steps=120,
+                     probe_steps=30, g0=8)
+    assert res.g >= 1 and res.g <= 8
+    assert res.decisions[0].phase == "cold"
+    # training must actually make progress
+    assert res.losses[-20:].mean() < res.losses[:20].mean()
+
+
+def test_algorithm1_he_short_circuit():
+    """With FC dominating, the HE model should start the search at small g."""
+    ph = hm.PhaseTimes(t_conv_compute_1=1.0, t_fc=0.5, conv_grad_bytes=0.0)
+    assert hm.smallest_saturating_g(16, ph) <= 4
+
+
+def test_gp_ei_finds_good_point():
+    # simple bowl over the grid: best at eta=0.01, mu=0.6, g=4
+    def obj(eta, mu, g):
+        return ((np.log10(eta) + 2) ** 2 + (mu - 0.6) ** 2
+                + (np.log2(g) - 2) ** 2)
+    res = gp_ei_minimize(obj, etas=(0.1, 0.01, 0.001), mus=(0.0, 0.3, 0.6, 0.9),
+                         gs=(1, 2, 4, 8), budget=18, seed=0)
+    assert res.best_x == (0.01, 0.6, 4)
+
+
+def test_gp_ei_handles_divergence():
+    def obj(eta, mu, g):
+        if eta > 0.05:
+            return float("inf")
+        return (mu - 0.3) ** 2 + np.log10(eta) ** 2
+    res = gp_ei_minimize(obj, etas=(0.1, 0.01), mus=(0.0, 0.3),
+                         gs=(1, 2), budget=8, seed=1)
+    assert np.isfinite(res.best_y)
+    assert res.best_x[0] <= 0.05

@@ -1,0 +1,171 @@
+"""Core Omnivore correctness: delayed SGD semantics, grouped step, Theorem 1
+implicit momentum, HE model vs discrete-event simulation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hardware_model as hm
+from repro.core import queue_sim
+from repro.core.async_sgd import delayed_sgd_run, make_grouped_train_step
+from repro.core.compute_groups import GroupSpec, group_batch_split
+from repro.core.implicit_momentum import (implicit_momentum,
+                                          measure_momentum_from_updates,
+                                          optimal_explicit_momentum)
+from repro.core.workload import mlp_classify, quadratic
+
+
+def _sgd_reference(loss_fn, params, batches, lr, mu):
+    """Plain momentum SGD, step by step."""
+    flat, tree = jax.tree.flatten(params)
+    v = [jnp.zeros_like(f) for f in flat]
+    losses = []
+    n = jax.tree.leaves(batches)[0].shape[0]
+    for t in range(n):
+        batch = jax.tree.map(lambda x: x[t], batches)
+        l, g = jax.value_and_grad(loss_fn)(tree.unflatten(flat), batch)
+        gf = jax.tree.leaves(g)
+        v = [mu * vv - lr * gg for vv, gg in zip(v, gf)]
+        flat = [f + vv for f, vv in zip(flat, v)]
+        losses.append(float(l))
+    return tree.unflatten(flat), np.array(losses)
+
+
+def test_delayed_sgd_zero_staleness_is_sgd():
+    wl = mlp_classify()
+    params = wl.init(jax.random.PRNGKey(0))
+    batches = wl.sample_batches(jax.random.PRNGKey(1), 10, wl.batch_size)
+    final, losses, _ = delayed_sgd_run(wl.loss_fn, params, batches,
+                                       staleness=0, lr=0.05, momentum=0.6)
+    ref, ref_losses = _sgd_reference(wl.loss_fn, params, batches, 0.05, 0.6)
+    np.testing.assert_allclose(np.asarray(losses), ref_losses, rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(final), jax.tree.leaves(ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                                   atol=1e-6)
+
+
+def test_delayed_sgd_staleness_uses_old_params():
+    """With staleness S, the gradient at step t must equal grad(W_{t-S})."""
+    # 1-D quadratic, no noise: loss = 0.5 w^2, grad = w. Track exactly.
+    def loss_fn(p, batch):
+        return 0.5 * p["w"] ** 2
+    batches = {"dummy": jnp.zeros((6, 1))}
+    lr, S = 0.1, 2
+    final, _, trace = delayed_sgd_run(loss_fn, {"w": jnp.float32(1.0)},
+                                      batches, staleness=S, lr=lr,
+                                      record_params=True)
+    w = [1.0]
+    for t in range(6):
+        stale = w[max(0, t - S)]
+        w.append(w[-1] - lr * stale)
+    np.testing.assert_allclose(np.asarray(trace["w"]), np.array(w[1:]),
+                               rtol=1e-6)
+
+
+def test_grouped_step_g1_equals_sync():
+    wl = mlp_classify()
+    params = wl.init(jax.random.PRNGKey(0))
+    batches = wl.sample_batches(jax.random.PRNGKey(1), 4, wl.batch_size)
+    step = make_grouped_train_step(wl.loss_fn, num_groups=1, lr=0.05,
+                                   momentum=0.9)
+    mom = jax.tree.map(jnp.zeros_like, params)
+    p, m = params, mom
+    for t in range(4):
+        batch = jax.tree.map(lambda x: x[t][None], batches)  # g=1 leading axis
+        p, m, loss = step(p, m, batch)
+    ref, _ = _sgd_reference(wl.loss_fn, params, batches, 0.05, 0.9)
+    for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                                   atol=1e-6)
+
+
+def test_grouped_step_head_sync():
+    """Merged-FC: head params get ONE averaged update per round; backbone
+    gets g sequential updates."""
+    def loss_fn(p, batch):
+        return jnp.sum(p["conv"] * batch["x"]) + jnp.sum(p["fc"] * batch["x"])
+
+    def head_filter(path):
+        return any(getattr(k, "key", None) == "fc" for k in path)
+
+    g, lr = 4, 0.1
+    params = {"conv": jnp.float32(0.0), "fc": jnp.float32(0.0)}
+    mom = jax.tree.map(jnp.zeros_like, params)
+    batches = {"x": jnp.arange(1.0, g + 1.0)}     # grads = 1..4 per group
+    step = make_grouped_train_step(loss_fn, num_groups=g, lr=lr, momentum=0.0,
+                                   head_filter=head_filter)
+    p, m, loss = step(params, mom, batches)
+    # backbone: sum of the 4 gradients; head: mean of the 4 gradients
+    np.testing.assert_allclose(float(p["conv"]), -lr * (1 + 2 + 3 + 4), rtol=1e-6)
+    np.testing.assert_allclose(float(p["fc"]), -lr * 2.5, rtol=1e-6)
+
+
+def test_group_spec_and_split():
+    gs = GroupSpec(num_groups=4, num_devices=16)
+    assert gs.staleness == 3 and gs.group_size == 4
+    assert abs(gs.implicit_momentum - 0.75) < 1e-9
+    with pytest.raises(ValueError):
+        GroupSpec(num_groups=3, num_devices=16)
+    b = group_batch_split({"x": jnp.zeros((8, 5))}, 4)
+    assert b["x"].shape == (4, 2, 5)
+
+
+@pytest.mark.parametrize("g", [2, 4, 8])
+def test_theorem1_implicit_momentum(g):
+    """Simulate Theorem 1's exact model (memoryless async workers, mu=0) on a
+    quadratic; the AR(2) fit of the expected trajectory must recover implicit
+    momentum 1 - 1/g (paper Fig. 6 left)."""
+    from repro.core.implicit_momentum import async_quadratic_sim, fit_ar2_momentum
+    traj = async_quadratic_sim(g=g, eta=0.2, steps=300, runs=2000)
+    mu_eff, eta_eff = fit_ar2_momentum(traj[3:])
+    mu_th = implicit_momentum(g)
+    assert abs(mu_eff - mu_th) < 0.03, (g, mu_eff, mu_th)
+    assert abs(eta_eff - 0.2 / g) < 0.02, (g, eta_eff)
+
+
+def test_delayed_sgd_staleness_slows_convergence():
+    """Sanity on the SPMD-semantics object: more staleness (mu=0) must not
+    converge faster on a smooth problem; and tuning mu down compensates."""
+    wl = quadratic(dim=8, cond=3.0, noise=0.0)
+    params = wl.init(jax.random.PRNGKey(0))
+    batches = wl.sample_batches(jax.random.PRNGKey(1), 200, 1)
+    final = {}
+    for S in (0, 7):
+        _, losses, _ = delayed_sgd_run(wl.loss_fn, params, batches,
+                                       staleness=S, lr=0.3, momentum=0.0)
+        final[S] = float(np.asarray(losses)[-10:].mean())
+    assert final[7] >= final[0] - 1e-6
+
+
+def test_optimal_explicit_momentum():
+    assert optimal_explicit_momentum(1, 0.9) == pytest.approx(0.9)
+    assert optimal_explicit_momentum(2, 0.9) == pytest.approx(0.8)
+    assert optimal_explicit_momentum(16, 0.9) == 0.0  # implicit exceeds opt
+
+
+def test_he_model_matches_queue_sim():
+    """Analytic HE(g) vs discrete-event simulation (paper Fig. 5b)."""
+    ph = hm.PhaseTimes(t_conv_compute_1=1.0, t_fc=0.05, conv_grad_bytes=0.0)
+    for g in (1, 2, 4, 8, 16):
+        pred = hm.he_time_per_iteration(g, 16, ph)
+        sim = queue_sim.simulate(g=g, t_conv=1.0 / (16 // g), t_fc=0.05,
+                                 iters=4000, exponential=False)
+        assert abs(sim.time_per_iteration - pred) / pred < 0.15, (
+            g, pred, sim.time_per_iteration)
+
+
+def test_he_saturation_regimes():
+    ph = hm.PhaseTimes(t_conv_compute_1=1.0, t_fc=0.2, conv_grad_bytes=0.0)
+    # g large enough -> FC-saturated: time == t_fc
+    assert hm.he_time_per_iteration(16, 16, ph) == pytest.approx(0.2)
+    # sync: (t_conv(16) + t_fc) / 1
+    assert hm.he_time_per_iteration(1, 16, ph) == pytest.approx(1.0 / 16 + 0.2)
+    assert hm.smallest_saturating_g(16, ph) in (2, 4)
+
+
+def test_queue_sim_staleness_mean():
+    """Mean staleness ~= g - 1 (round-robin regime, paper §IV-A)."""
+    for g in (2, 4, 8):
+        r = queue_sim.simulate(g=g, t_conv=1.0, t_fc=0.01, iters=3000,
+                               exponential=True)
+        assert abs(r.mean_staleness - (g - 1)) < 0.5, (g, r.mean_staleness)

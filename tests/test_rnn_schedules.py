@@ -1,0 +1,44 @@
+"""RNN/LSTM workload (paper App. F-F) + LR schedules (App. F-G)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.async_sgd import delayed_sgd_run
+from repro.core.workload import rnn_classify
+from repro.optim import schedules as S
+
+
+def test_lstm_workload_trains():
+    wl = rnn_classify()
+    params = wl.init(jax.random.PRNGKey(0))
+    batches = wl.sample_batches(jax.random.PRNGKey(1), 150, wl.batch_size)
+    _, losses, _ = delayed_sgd_run(wl.loss_fn, params, batches, staleness=0,
+                                   lr=0.1, momentum=0.6)
+    l = np.asarray(losses)
+    assert l[-15:].mean() < 0.6 * l[:15].mean()
+
+
+def test_lstm_staleness_penalty():
+    """More asynchrony (untuned) must not converge faster — Fig. 32's SE
+    penalty on recurrent models."""
+    wl = rnn_classify()
+    params = wl.init(jax.random.PRNGKey(0))
+    batches = wl.sample_batches(jax.random.PRNGKey(1), 200, wl.batch_size)
+    finals = {}
+    for s in (0, 3):
+        _, losses, _ = delayed_sgd_run(wl.loss_fn, params, batches,
+                                       staleness=s, lr=0.1, momentum=0.6)
+        finals[s] = float(np.asarray(losses)[-20:].mean())
+    assert finals[3] >= finals[0] - 1e-3
+
+
+def test_schedules():
+    assert S.constant(0.1)(10**6) == 0.1
+    sd = S.step_decay(1.0, drop=10, every=100)
+    assert sd(99) == 1.0 and sd(100) == pytest.approx(0.1)
+    cs = S.cosine(1.0, total_steps=100)
+    assert cs(0) == pytest.approx(1.0)
+    assert cs(100) == pytest.approx(0.1)
+    wu = S.warmup_then(S.constant(1.0), 10)
+    assert wu(0) == pytest.approx(0.1)
+    assert wu(20) == 1.0
