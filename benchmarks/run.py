@@ -29,25 +29,44 @@ def _row(name, us, derived):
     print(f"{name},{us:.1f},{derived}", flush=True)
 
 
+def _timeit(fn, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall seconds of ``fn()`` over ``iters`` runs, after ``warmup``
+    untimed calls (absorbs jit compilation, which the old one-span
+    time.time() measurements conflated with execution)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
 # ---------------------------------------------------------------------------
 
 def fig4_lowering_blocksize():
     """Paper Fig. 4: GEMM speed & memory vs b_p. On TPU the tradeoff is VMEM
     footprint vs MXU tile alignment; interpret-mode wall time included for
     relative CPU sanity only."""
-    from repro.kernels.lowering_conv import ops as lc, vmem_bytes
+    from repro.kernels.lowering_conv import choose_tiles, ops as lc, vmem_bytes
     x = jax.random.normal(jax.random.PRNGKey(0), (16, 16, 16, 8))
     w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 8, 32))
+    b, h, wd, cin = x.shape
+    kh, kw, _, cout = w.shape
+    ho, wo = (h - kh) + 1, (wd - kw) + 1           # stride 1, VALID
     for bp in (1, 2, 4, 8, 16):
-        t0 = time.time()
-        out = lc.lowering_conv(x, w, stride=1, bp=bp, rb=7, interpret=True)
-        out.block_until_ready()
-        us = (time.time() - t0) * 1e6
-        vm = vmem_bytes(bp=bp, rb=7, h=16, w=16, cin=8, kh=3, kw=3, cout=32)
-        gemm_m = bp * 7 * 14
+        us = _timeit(lambda: lc.lowering_conv(x, w, stride=1, bp=bp, rb=7,
+                                              interpret=True),
+                     warmup=1, iters=3) * 1e6
+        bp_c, rb_c = choose_tiles(b, ho, bp, 7)    # tiles the kernel ran
+        vm = vmem_bytes(bp=bp_c, rb=rb_c, h=h, w=wd, cin=cin, kh=kh, kw=kw,
+                        cout=cout)
+        gemm_m = bp_c * rb_c * wo
         aligned = "ok" if gemm_m % 128 == 0 else f"pad{128 - gemm_m % 128}"
         _row(f"fig4_bp{bp}", us,
-             f"vmem_kB={vm//1024};gemm_M={gemm_m};mxu={aligned}")
+             f"bp={bp_c};rb={rb_c};vmem_kB={vm//1024};gemm_M={gemm_m};"
+             f"mxu={aligned}")
 
 
 def fig5_he_model():
@@ -258,6 +277,56 @@ def table_optimizer_vs_bayes():
          f"wall_ratio_vs_alg1={us2/max(us1,1):.1f}x")
 
 
+def bench_grouped_step():
+    """Per-round grouped UPDATE application: closed-form fused single pass
+    vs the literal O(g) sequential scan (gradients precomputed, so this
+    isolates the optimizer hot path the fused kernel rewrites). Emits
+    BENCH_grouped_step.json for cross-PR perf tracking."""
+    from repro.core.async_sgd import scan_grouped_update
+    from repro.kernels.fused_update.ops import fused_group_update
+    from repro.optim.closed_form import grouped_coeffs, head_coeffs
+    import functools
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    params = {"emb": jax.random.normal(ks[0], (2048, 256)),
+              "w1": jax.random.normal(ks[1], (512, 1024)),
+              "w2": jax.random.normal(ks[2], (1024, 512)),
+              "head": jax.random.normal(ks[3], (512, 256))}
+    mom = jax.tree.map(jnp.zeros_like, params)
+    mask = {k: k == "head" for k in params}
+    lr, mu, wd = 0.05, 0.9, 1e-4
+
+    rows = []
+    for g in (2, 4, 8):
+        grads = jax.tree.map(
+            lambda p: jax.random.normal(jax.random.PRNGKey(g), (g,) + p.shape),
+            params)
+        scan_fn = jax.jit(functools.partial(
+            scan_grouped_update, lr=lr, momentum=mu, weight_decay=wd,
+            head_mask=mask))
+        fused_fn = jax.jit(functools.partial(
+            fused_group_update,
+            coeffs=grouped_coeffs(g, lr=lr, momentum=mu, weight_decay=wd),
+            head_coeffs=head_coeffs(g, lr=lr, momentum=mu, weight_decay=wd),
+            head_mask=mask))
+        scan_s = _timeit(lambda: scan_fn(params, grads, mom), warmup=2,
+                         iters=11)
+        fused_s = _timeit(lambda: fused_fn(params, grads, mom), warmup=2,
+                         iters=11)
+        speedup = scan_s / fused_s
+        rows.append({"g": g, "scan_us": scan_s * 1e6,
+                     "fused_us": fused_s * 1e6, "speedup": speedup})
+        _row(f"grouped_step_g{g}", fused_s * 1e6,
+             f"scan_us={scan_s * 1e6:.1f};speedup={speedup:.2f}x")
+
+    out = {"bench": "grouped_step",
+           "params": int(sum(p.size for p in jax.tree.leaves(params))),
+           "lr": lr, "momentum": mu, "weight_decay": wd,
+           "timeit": {"warmup": 2, "iters": 11, "stat": "median"},
+           "rows": rows}
+    (ROOT / "BENCH_grouped_step.json").write_text(json.dumps(out, indent=2))
+
+
 def roofline_table():
     d = ROOT / "experiments" / "dryrun"
     rows = sorted(d.glob("*__16x16.json"))
@@ -280,7 +349,7 @@ def roofline_table():
 BENCHES = [fig4_lowering_blocksize, fig5_he_model, fig6_implicit_momentum,
            fig7_tradeoff, fig13_momentum_lesion, fig23_batch_size,
            fig32_rnn_tradeoff, fig33_schedules,
-           table_optimizer_vs_bayes, roofline_table]
+           table_optimizer_vs_bayes, bench_grouped_step, roofline_table]
 
 
 def main() -> None:

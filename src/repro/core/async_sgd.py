@@ -9,11 +9,17 @@ Two implementations of the paper's execution strategy:
 
 2. ``grouped_train_step`` — the deployable SPMD step: each round, all g
    groups compute gradients at the round-start parameters **in parallel**
-   (full hardware utilization on the mesh), then the g updates are applied
-   **sequentially**, so group i's gradient lands i updates stale — the
-   paper's Fig. 17(b) round-robin picture. ``sync_head`` implements the
-   merged-FC optimization: head params see the *summed* (zero-staleness)
-   update each round.
+   (full hardware utilization on the mesh), then the g updates land with
+   staleness 0..g-1 — the paper's Fig. 17(b) round-robin picture.
+   ``head_filter`` implements the merged-FC optimization: head params see
+   one averaged (zero-staleness) update each round.
+
+   Because all g gradients are evaluated at round-start parameters, the g
+   sequential momentum-SGD sub-steps form a linear recurrence with a
+   closed-form solution (optim/closed_form.py). The default
+   ``strategy="fused"`` applies that closed form in ONE pass over the
+   parameters (kernels/fused_update); ``strategy="scan"`` keeps the
+   literal O(g) sequential application as the semantic reference.
 
 Both reduce exactly to synchronous data-parallel SGD at g=1.
 """
@@ -24,6 +30,8 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.fused_update.ops import fused_group_update
+from repro.optim.closed_form import grouped_coeffs, head_coeffs
 from repro.optim.sgd import sgd_update
 
 
@@ -76,10 +84,71 @@ def delayed_sgd_run(loss_fn: Callable, params, batches, *, staleness: int,
 # 2. Deployable SPMD grouped step
 # ---------------------------------------------------------------------------
 
+def scan_grouped_update(params, grads, mom_buf, *, lr: float, momentum: float,
+                        weight_decay: float = 0.0, head_mask=None):
+    """Reference O(g) update application: the literal sequential scan over
+    the g sub-steps (plus the merged-FC head update). ``grads`` carries a
+    leading (g, ...) group axis per leaf. Returns (params, mom_buf).
+    Argument order matches ``sgd_update`` and ``fused_group_update`` so the
+    strategies are drop-in interchangeable.
+
+    Kept as the semantic oracle for the fused closed-form path — it pays
+    g read-modify-write passes over every leaf and a per-leaf fp32 cast
+    round-trip per sub-step, which is exactly what fused_group_update
+    collapses.
+    """
+    g = jax.tree.leaves(grads)[0].shape[0]
+    if head_mask is None:
+        head_mask = jax.tree.map(lambda _: False, params)
+
+    if g == 1:
+        grads0 = jax.tree.map(lambda gr: gr[0], grads)
+        return sgd_update(params, grads0, mom_buf, lr=lr, momentum=momentum,
+                          weight_decay=weight_decay)
+
+    # merged-FC head: single synchronous averaged update per round
+    head_grads = jax.tree.map(lambda gr: gr.mean(axis=0), grads)
+
+    def upd_leaf(p, gg, v):
+        g32 = gg.astype(jnp.float32)
+        if weight_decay:
+            g32 = g32 + weight_decay * p.astype(jnp.float32)
+        v_new = momentum * v.astype(jnp.float32) - lr * g32
+        return ((p.astype(jnp.float32) + v_new).astype(p.dtype),
+                v_new.astype(v.dtype))
+
+    def apply_one(carry, i):
+        p, v = carry
+        gi = jax.tree.map(lambda gr: gr[i], grads)
+        # backbone: apply group-i gradient; head: untouched this sub-step
+        new = jax.tree.map(
+            lambda m, pp, gg, vv: (pp, vv) if m else upd_leaf(pp, gg, vv),
+            head_mask, p, gi, v)
+        p = jax.tree.map(lambda t: t[0], new,
+                         is_leaf=lambda t: isinstance(t, tuple))
+        v = jax.tree.map(lambda t: t[1], new,
+                         is_leaf=lambda t: isinstance(t, tuple))
+        return (p, v), None
+
+    (params, mom_buf), _ = jax.lax.scan(
+        apply_one, (params, mom_buf), jnp.arange(g))
+    # head update (zero-staleness, merged FC), once per round
+    new = jax.tree.map(
+        lambda m, pp, gg, vv: upd_leaf(pp, gg, vv) if m else (pp, vv),
+        head_mask, params, head_grads, mom_buf)
+    params = jax.tree.map(lambda t: t[0], new,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    mom_buf = jax.tree.map(lambda t: t[1], new,
+                           is_leaf=lambda t: isinstance(t, tuple))
+    return params, mom_buf
+
+
 def make_grouped_train_step(loss_fn: Callable, *, num_groups: int, lr: float,
                             momentum: float, weight_decay: float = 0.0,
                             head_filter: Optional[Callable] = None,
-                            grad_accum: int = 1):
+                            grad_accum: int = 1, strategy: str = "fused",
+                            update_impl: str = "xla",
+                            interpret: Optional[bool] = None):
     """Build ``step(params, mom_buf, batches) -> (params, mom_buf, loss)``.
 
     ``batches``: pytree with leading axis ``(g, ...)`` (one microbatch per
@@ -89,9 +158,23 @@ def make_grouped_train_step(loss_fn: Callable, *, num_groups: int, lr: float,
     ``head_filter(path) -> bool`` marks head ("FC-phase") params: merged-FC
     semantics — their g per-group gradients are averaged and applied once
     per round (zero staleness), while backbone params receive the g updates
-    sequentially (staleness 0..g-1).
+    with staleness 0..g-1.
+
+    ``strategy``: "fused" (default) applies the closed form of the g
+    sub-steps in one fused pass; "scan" is the literal sequential
+    reference. ``update_impl``: "xla" or "pallas" leaf kernel for the
+    fused path; ``interpret`` forces the Pallas interpreter (default:
+    compile natively on TPU, interpret elsewhere).
     """
+    if strategy not in ("fused", "scan"):
+        raise ValueError(f"unknown strategy {strategy!r}")
+    # interpret=None flows through to the leaf dispatch, which resolves it
+    # (compile natively on TPU, interpret elsewhere) in one place
     g = num_groups
+    coeffs = grouped_coeffs(g, lr=lr, momentum=momentum,
+                            weight_decay=weight_decay)
+    hcoeffs = head_coeffs(g, lr=lr, momentum=momentum,
+                          weight_decay=weight_decay)
 
     def per_group_grad(params, batch):
         if grad_accum == 1:
@@ -107,55 +190,21 @@ def make_grouped_train_step(loss_fn: Callable, *, num_groups: int, lr: float,
     def is_head_tree(params):
         if head_filter is None:
             return jax.tree.map(lambda _: False, params)
-        return jax.tree.map_with_path(lambda path, _: bool(head_filter(path)),
-                                      params)
+        return jax.tree_util.tree_map_with_path(
+            lambda path, _: bool(head_filter(path)), params)
 
     def step(params, mom_buf, batches):
         # all group gradients at round-start params, in parallel
         losses, grads = jax.vmap(per_group_grad, in_axes=(None, 0))(params, batches)
         head_mask = is_head_tree(params)
-
-        if g == 1:
-            grads0 = jax.tree.map(lambda gr: gr[0], grads)
-            params, mom_buf = sgd_update(params, grads0, mom_buf, lr=lr,
-                                         momentum=momentum,
-                                         weight_decay=weight_decay)
-            return params, mom_buf, losses.mean()
-
-        # merged-FC head: single synchronous averaged update per round
-        head_grads = jax.tree.map(lambda gr: gr.mean(axis=0), grads)
-
-        def upd_leaf(p, gg, v):
-            g32 = gg.astype(jnp.float32)
-            if weight_decay:
-                g32 = g32 + weight_decay * p.astype(jnp.float32)
-            v_new = momentum * v.astype(jnp.float32) - lr * g32
-            return ((p.astype(jnp.float32) + v_new).astype(p.dtype),
-                    v_new.astype(v.dtype))
-
-        def apply_one(carry, i):
-            p, v = carry
-            gi = jax.tree.map(lambda gr: gr[i], grads)
-            # backbone: apply group-i gradient; head: untouched this sub-step
-            new = jax.tree.map(
-                lambda m, pp, gg, vv: (pp, vv) if m else upd_leaf(pp, gg, vv),
-                head_mask, p, gi, v)
-            p = jax.tree.map(lambda t: t[0], new,
-                             is_leaf=lambda t: isinstance(t, tuple))
-            v = jax.tree.map(lambda t: t[1], new,
-                             is_leaf=lambda t: isinstance(t, tuple))
-            return (p, v), None
-
-        (params, mom_buf), _ = jax.lax.scan(
-            apply_one, (params, mom_buf), jnp.arange(g))
-        # head update (zero-staleness, merged FC), once per round
-        new = jax.tree.map(
-            lambda m, pp, gg, vv: upd_leaf(pp, gg, vv) if m else (pp, vv),
-            head_mask, params, head_grads, mom_buf)
-        params = jax.tree.map(lambda t: t[0], new,
-                              is_leaf=lambda t: isinstance(t, tuple))
-        mom_buf = jax.tree.map(lambda t: t[1], new,
-                               is_leaf=lambda t: isinstance(t, tuple))
+        if strategy == "scan":
+            params, mom_buf = scan_grouped_update(
+                params, grads, mom_buf, lr=lr, momentum=momentum,
+                weight_decay=weight_decay, head_mask=head_mask)
+        else:
+            params, mom_buf = fused_group_update(
+                params, grads, mom_buf, coeffs=coeffs, head_coeffs=hcoeffs,
+                head_mask=head_mask, impl=update_impl, interpret=interpret)
         return params, mom_buf, losses.mean()
 
     return step

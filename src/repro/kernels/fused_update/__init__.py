@@ -1,0 +1,4 @@
+from repro.kernels.fused_update import ops, ref
+from repro.kernels.fused_update.fused_update import fused_update_pallas
+from repro.kernels.fused_update.ops import fused_group_update, fused_update
+from repro.kernels.fused_update.ref import fused_update_ref

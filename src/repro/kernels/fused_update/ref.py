@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the fused grouped update (and the production path on
+non-TPU backends): the same closed-form weighted combination, with the fp32
+accumulation left to XLA fusion."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.closed_form import GroupedCoeffs
+
+
+def fused_update_ref(w: jax.Array, v: jax.Array, gstack: jax.Array,
+                     coeffs: GroupedCoeffs):
+    """One leaf: w/v any shape, gstack (g, *w.shape). Returns (w_new, v_new)."""
+    if gstack.shape[0] != coeffs.num_groups:
+        raise ValueError(f"gstack has {gstack.shape[0]} groups, "
+                         f"coeffs {coeffs.num_groups}")
+    w32 = w.astype(jnp.float32)
+    v32 = v.astype(jnp.float32)
+    w_new = coeffs.cww * w32 + coeffs.cwv * v32
+    v_new = coeffs.cvw * w32 + coeffs.cvv * v32
+    # static unroll with Python-float coefficients: XLA fuses the whole
+    # combination into ONE streaming pass over the stacked gradients
+    # (a tensordot here lowers to a packed GEMM on CPU — far slower)
+    for i in range(coeffs.num_groups):
+        g32 = gstack[i].astype(jnp.float32)
+        w_new = w_new + coeffs.a[i] * g32
+        v_new = v_new + coeffs.b[i] * g32
+    return w_new.astype(w.dtype), v_new.astype(v.dtype)

@@ -1,3 +1,5 @@
 from repro.kernels.lowering_conv import ops, ref
-from repro.kernels.lowering_conv.lowering_conv import (lowering_conv_pallas,
+from repro.kernels.lowering_conv.lowering_conv import (choose_tiles,
+                                                       largest_divisor,
+                                                       lowering_conv_pallas,
                                                        vmem_bytes)

@@ -23,6 +23,30 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def largest_divisor(n: int, cap: int) -> int:
+    """Largest divisor of n that is <= cap (>= 1). O(sqrt n) via divisor
+    pairs instead of decrement-by-1 probing."""
+    cap = max(1, min(cap, n))
+    best = 1
+    d = 1
+    while d * d <= n:
+        if n % d == 0:
+            if d <= cap:
+                best = max(best, d)
+            if n // d <= cap:
+                best = max(best, n // d)
+        d += 1
+    return best
+
+
+def choose_tiles(b: int, ho: int, bp: int, rb: int) -> tuple:
+    """Resolve requested (b_p, r_b) to the tile sizes the kernel will
+    actually run: the largest divisors of the batch / output-rows not
+    exceeding the request. Exposed so benchmarks can report the real
+    tiling instead of the requested one."""
+    return largest_divisor(b, bp), largest_divisor(ho, rb)
+
+
 def _kernel(d_ref, k_ref, r_ref, *, kh, kw, stride, rb, wo):
     ir = pl.program_id(1)
     d = d_ref[...]                                 # (bp, H, W, Cin)
@@ -57,12 +81,7 @@ def lowering_conv_pallas(x: jax.Array, w: jax.Array, *, stride: int = 1,
     kh, kw, _, cout = w.shape
     ho = (h - kh) // stride + 1
     wo = (wdim - kw) // stride + 1
-    bp = min(bp, b)
-    while b % bp:
-        bp -= 1
-    rb = min(rb, ho)
-    while ho % rb:
-        rb -= 1
+    bp, rb = choose_tiles(b, ho, bp, rb)
     k_hat = w.reshape(kh * kw * cin, cout)
 
     grid = (b // bp, ho // rb)

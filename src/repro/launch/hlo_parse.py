@@ -34,6 +34,12 @@ _SHAPES_ALL = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
 _CALL_RE = re.compile(r"(?:calls|body|condition|to_apply|branch_computations)="
                       r"[{]?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)[}]?")
 _CONST_RE = re.compile(r"=\s*[su]\d+\[\]\s+constant\((\d+)\)")
+# operand with optional inline type annotation, e.g.
+#   dot(f32[8,32]{1,0} %copy.10, ...)   vs   dot(%copy.10, ...)
+_TY = r"(?:([a-z0-9]+)\[([0-9,]*)\](?:\{[^}]*\})?\s+)?"
+_DOT_OPS = re.compile(r"\bdot\(\s*" + _TY + r"%?([\w.\-]+)")
+_CONV_OPS = re.compile(r"convolution\(\s*" + _TY + r"%?([\w.\-]+)\s*,\s*" +
+                       _TY + r"%?([\w.\-]+)")
 
 
 def _shape_elems(dims: str) -> int:
@@ -98,11 +104,12 @@ def _dot_flops(line: str, shapes: Dict[str, Tuple[str, str]]) -> float:
     if not rs:
         return 0.0
     result_elems = _shape_elems(rs.group(2))
-    ops = re.search(r"\bdot\(\s*%?([\w.\-]+)", rhs)
+    ops = _DOT_OPS.search(rhs)
     if not ops:
         return 0.0
-    lhs_name = ops.group(1)
-    lhs = shapes.get(lhs_name)
+    # inline operand shape if present (current HLO text), else def lookup
+    lhs = ((ops.group(1), ops.group(2)) if ops.group(1) is not None
+           else shapes.get(ops.group(3)))
     cdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rhs)
     if lhs is None or cdims is None:
         return 0.0
@@ -123,11 +130,12 @@ def _conv_flops(line: str, shapes: Dict[str, Tuple[str, str]]) -> float:
     if " convolution(" not in rhs and not rhs.startswith("convolution("):
         return 0.0
     rs = _SHAPE_RE.match(rhs)
-    ops = re.search(r"convolution\(\s*%?([\w.\-]+)\s*,\s*%?([\w.\-]+)", rhs)
+    ops = _CONV_OPS.search(rhs)
     if not rs or not ops:
         return 0.0
     result_elems = _shape_elems(rs.group(2))
-    ker = shapes.get(ops.group(2))
+    ker = ((ops.group(4), ops.group(5)) if ops.group(4) is not None
+           else shapes.get(ops.group(6)))
     if ker is None:
         return 0.0
     kdims = [int(d) for d in ker[1].split(",")] if ker[1] else []

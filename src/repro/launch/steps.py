@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, InputShape, TrainConfig
 from repro.models import transformer as T
+from repro.optim.sgd import sgd_update
 
 # sliding window used for the long_500k sub-quadratic attention variant
 LONG_CONTEXT_WINDOW = 8192
@@ -116,7 +117,6 @@ def make_train_step(cfg: ArchConfig, tc: TrainConfig, shape: InputShape,
             grads = jax.tree.map(lambda g: g / tc.grad_accum, grads)
         else:
             loss, grads = jax.value_and_grad(loss_fn)(params, batch)
-        from repro.optim.sgd import sgd_update
         params, mom = sgd_update(params, grads, mom, lr=tc.learning_rate,
                                  momentum=tc.momentum,
                                  weight_decay=tc.weight_decay)

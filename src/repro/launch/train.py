@@ -42,6 +42,12 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=0.02)
     ap.add_argument("--momentum", type=float, default=0.9)
     ap.add_argument("--weight-decay", type=float, default=0.0)
+    ap.add_argument("--strategy", choices=("fused", "scan"), default="fused",
+                    help="grouped update: closed-form fused pass (default) "
+                         "or the literal O(g) sequential scan reference")
+    ap.add_argument("--update-impl", choices=("xla", "pallas"), default="xla",
+                    help="leaf kernel for the fused update (pallas runs "
+                         "interpret-mode off-TPU)")
     ap.add_argument("--ckpt", type=str, default="")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -57,9 +63,13 @@ def main(argv=None):
     def loss_fn(p, batch):
         return T.lm_loss(p, batch, cfg)
 
+    # donate params/momentum: the fused update rewrites them in place
+    # instead of holding both generations live. The Pallas leaf kernel
+    # compiles natively on TPU and falls back to interpret mode elsewhere.
     step = jax.jit(make_grouped_train_step(
         loss_fn, num_groups=args.groups, lr=args.lr, momentum=args.momentum,
-        weight_decay=args.weight_decay))
+        weight_decay=args.weight_decay, strategy=args.strategy,
+        update_impl=args.update_impl), donate_argnums=(0, 1))
 
     data = SyntheticLM(DataConfig(batch_size=args.batch, seq_len=args.seq,
                                   vocab_size=cfg.vocab_size, seed=args.seed))

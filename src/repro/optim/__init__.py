@@ -1,3 +1,6 @@
+from repro.optim.closed_form import (GroupedCoeffs, grouped_coeffs,
+                                     head_coeffs)
 from repro.optim.sgd import init_momentum, sgd_update
 
-__all__ = ["init_momentum", "sgd_update"]
+__all__ = ["GroupedCoeffs", "grouped_coeffs", "head_coeffs", "init_momentum",
+           "sgd_update"]

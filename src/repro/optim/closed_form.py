@@ -1,0 +1,92 @@
+"""Closed form of g sequential momentum-SGD sub-steps on round-start
+gradients (the grouped execution strategy, paper Fig. 17(b)).
+
+Each sub-step i of a round applies paper eq. (3)-(4) with gradient g_i that
+was evaluated at the *round-start* parameters, so the gradients are
+constants of the recurrence and only the weight-decay term couples to the
+evolving parameters:
+
+    V_{i+1} = mu * V_i - eta * (g_i + lambda * W_i)
+    W_{i+1} = W_i + V_{i+1}
+
+which is the 2x2 linear recurrence
+
+    [W_{i+1}]   [1 - eta*lambda   mu] [W_i]   [-eta]
+    [V_{i+1}] = [   -eta*lambda   mu] [V_i] + [-eta] * g_i
+
+Unrolling g steps (the algebra of "Asynchrony begets Momentum",
+arXiv:1605.09774) gives one fused update over the stacked gradients:
+
+    [W_g]       [W_0]   sum_i  [a_i]
+    [V_g] = A^g [V_0] +        [b_i] * g_i,   [a_i; b_i] = A^{g-1-i} b
+
+With lambda = 0 this is the familiar  W += sum_i a_i g_i,
+V = mu^g V + sum_i b_i g_i  with a_i, b_i polynomials in mu. All
+coefficients depend only on (g, eta, mu, lambda) — static hyperparameters —
+so they are computed here once in float64 and baked into the compiled
+update as constants. See docs/fused_update.md for the full derivation.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupedCoeffs:
+    """Scalar coefficients of the fused g-sub-step update.
+
+    W_new = cww*W + cwv*V + sum_i a[i]*g_i
+    V_new = cvw*W + cvv*V + sum_i b[i]*g_i
+
+    Frozen + tuple-valued so instances are hashable (usable as jit static
+    arguments).
+    """
+    a: tuple            # per-group W coefficients, len g
+    b: tuple            # per-group V coefficients, len g
+    cww: float
+    cwv: float
+    cvw: float
+    cvv: float
+
+    @property
+    def num_groups(self) -> int:
+        return len(self.a)
+
+
+def grouped_coeffs(num_groups: int, *, lr: float, momentum: float = 0.0,
+                   weight_decay: float = 0.0) -> GroupedCoeffs:
+    """Coefficients of g sequential backbone sub-steps (staleness 0..g-1).
+
+    a[i], b[i] = A^{g-1-i} @ (-eta, -eta); (cww..cvv) = A^g. Group i's
+    gradient lands i updates stale, so it passes through g-1-i further
+    applications of A — exactly the sequential scan, collapsed.
+    """
+    if num_groups < 1:
+        raise ValueError(f"num_groups must be >= 1, got {num_groups}")
+    A = np.array([[1.0 - lr * weight_decay, momentum],
+                  [-lr * weight_decay, momentum]], dtype=np.float64)
+    bvec = np.array([-lr, -lr], dtype=np.float64)
+    a = np.zeros(num_groups, dtype=np.float64)
+    b = np.zeros(num_groups, dtype=np.float64)
+    M = np.eye(2, dtype=np.float64)            # A^k, k = g-1-i
+    for k in range(num_groups):
+        i = num_groups - 1 - k
+        a[i], b[i] = M @ bvec
+        M = A @ M
+    return GroupedCoeffs(a=tuple(a.tolist()), b=tuple(b.tolist()),
+                         cww=float(M[0, 0]), cwv=float(M[0, 1]),
+                         cvw=float(M[1, 0]), cvv=float(M[1, 1]))
+
+
+def head_coeffs(num_groups: int, *, lr: float, momentum: float = 0.0,
+                weight_decay: float = 0.0) -> GroupedCoeffs:
+    """Merged-FC head: ONE zero-staleness update with the group-averaged
+    gradient per round. Same fused form — a single application of A with
+    the input vector split 1/g across the stacked gradients."""
+    one = grouped_coeffs(1, lr=lr, momentum=momentum,
+                         weight_decay=weight_decay)
+    return GroupedCoeffs(a=tuple([one.a[0] / num_groups] * num_groups),
+                         b=tuple([one.b[0] / num_groups] * num_groups),
+                         cww=one.cww, cwv=one.cwv, cvw=one.cvw, cvv=one.cvv)

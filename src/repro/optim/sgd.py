@@ -18,18 +18,20 @@ def init_momentum(params, dtype=None):
 
 def sgd_update(params, grads, momentum_buf, *, lr, momentum=0.0,
                weight_decay=0.0):
-    """One paper-eq-(3)/(4) update. Returns (new_params, new_momentum)."""
-    def upd(p, g, v):
+    """One paper-eq-(3)/(4) update in a single tree traversal.
+    Returns (new_params, new_momentum)."""
+    flat_p, tree = jax.tree.flatten(params)
+    # flatten_up_to raises on grads/momentum structure mismatch (a bare
+    # zip would silently truncate and mis-pair leaves)
+    flat_g = tree.flatten_up_to(grads)
+    flat_v = tree.flatten_up_to(momentum_buf)
+    new_p, new_v = [], []
+    for p, g, v in zip(flat_p, flat_g, flat_v):
         g32 = g.astype(jnp.float32)
         if weight_decay:
             g32 = g32 + weight_decay * p.astype(jnp.float32)
         v_new = momentum * v.astype(jnp.float32) - lr * g32
         p_new = p.astype(jnp.float32) + v_new
-        return p_new.astype(p.dtype), v_new.astype(v.dtype)
-
-    out = jax.tree.map(upd, params, grads, momentum_buf)
-    new_params = jax.tree.map(lambda t: t[0], out,
-                              is_leaf=lambda t: isinstance(t, tuple))
-    new_mom = jax.tree.map(lambda t: t[1], out,
-                           is_leaf=lambda t: isinstance(t, tuple))
-    return new_params, new_mom
+        new_p.append(p_new.astype(p.dtype))
+        new_v.append(v_new.astype(v.dtype))
+    return tree.unflatten(new_p), tree.unflatten(new_v)

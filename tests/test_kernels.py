@@ -4,7 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # property tests report as skipped; rest run
+    st = None
 
 from repro.kernels.flash_attention import ops as fa_ops
 from repro.kernels.flash_attention import ref as fa_ref
@@ -65,18 +69,23 @@ def test_vmem_model_linear_in_bp():
     assert abs((m4 - m2) - 2 * (m2 - m1)) < 1e-6 * m4
 
 
-@settings(max_examples=10, deadline=None)
-@given(b=st.integers(1, 4), hw=st.sampled_from([8, 11, 14]),
-       k=st.sampled_from([1, 3]), cin=st.integers(1, 4),
-       cout=st.sampled_from([4, 8]), seed=st.integers(0, 2**30))
-def test_lowering_conv_property(b, hw, k, cin, cout, seed):
-    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
-    x = jax.random.normal(ks[0], (b, hw, hw, cin))
-    w = jax.random.normal(ks[1], (k, k, cin, cout))
-    ref = lc_ref.conv_ref(x, w, 1)
-    out = lc_ops.lowering_conv(x, w, stride=1, bp=2, rb=3, interpret=True)
-    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
-                               rtol=3e-5, atol=3e-5)
+if st is None:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_lowering_conv_property():
+        pass
+else:
+    @settings(max_examples=10, deadline=None)
+    @given(b=st.integers(1, 4), hw=st.sampled_from([8, 11, 14]),
+           k=st.sampled_from([1, 3]), cin=st.integers(1, 4),
+           cout=st.sampled_from([4, 8]), seed=st.integers(0, 2**30))
+    def test_lowering_conv_property(b, hw, k, cin, cout, seed):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+        x = jax.random.normal(ks[0], (b, hw, hw, cin))
+        w = jax.random.normal(ks[1], (k, k, cin, cout))
+        ref = lc_ref.conv_ref(x, w, 1)
+        out = lc_ops.lowering_conv(x, w, stride=1, bp=2, rb=3, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=3e-5, atol=3e-5)
 
 
 # ---------------------------------------------------------------------------
@@ -121,19 +130,24 @@ def test_flash_attention_block_sizes(bq, bk):
                                rtol=2e-5, atol=2e-5)
 
 
-@settings(max_examples=8, deadline=None)
-@given(s=st.sampled_from([32, 48, 64]), h=st.sampled_from([1, 2]),
-       window=st.sampled_from([None, 8, 16]), seed=st.integers(0, 2**30))
-def test_flash_attention_property(s, h, window, seed):
-    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
-    q = jax.random.normal(ks[0], (1, s, h, 8))
-    k = jax.random.normal(ks[1], (1, s, h, 8))
-    v = jax.random.normal(ks[2], (1, s, h, 8))
-    ref = fa_ref.attention_ref(q, k, v, causal=True, window=window)
-    out = fa_ops.flash_attention(q, k, v, window=window, bq=16, bk=16,
-                                 interpret=True)
-    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
-                               rtol=3e-5, atol=3e-5)
+if st is None:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_flash_attention_property():
+        pass
+else:
+    @settings(max_examples=8, deadline=None)
+    @given(s=st.sampled_from([32, 48, 64]), h=st.sampled_from([1, 2]),
+           window=st.sampled_from([None, 8, 16]), seed=st.integers(0, 2**30))
+    def test_flash_attention_property(s, h, window, seed):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        q = jax.random.normal(ks[0], (1, s, h, 8))
+        k = jax.random.normal(ks[1], (1, s, h, 8))
+        v = jax.random.normal(ks[2], (1, s, h, 8))
+        ref = fa_ref.attention_ref(q, k, v, causal=True, window=window)
+        out = fa_ops.flash_attention(q, k, v, window=window, bq=16, bk=16,
+                                     interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=3e-5, atol=3e-5)
 
 
 def test_flash_matches_model_attention_path():

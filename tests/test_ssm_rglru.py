@@ -4,7 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # property tests report as skipped; rest run
+    st = None
 
 from repro.configs import get_smoke_config
 from repro.models import rglru as R
@@ -43,20 +47,26 @@ def test_ssd_chunked_matches_naive(chunk):
     np.testing.assert_allclose(np.asarray(hf), h_ref, rtol=1e-4, atol=1e-4)
 
 
-@settings(max_examples=15, deadline=None)
-@given(seed=st.integers(0, 2**30), s=st.sampled_from([8, 16, 24]),
-       chunk=st.sampled_from([4, 8]))
-def test_ssd_property(seed, s, chunk):
-    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
-    b, h, p, n = 1, 2, 3, 4
-    x = jax.random.normal(ks[0], (b, s, h, p))
-    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
-    A = jnp.abs(jax.random.normal(ks[2], (h,))) + 0.1
-    B = jax.random.normal(ks[3], (b, s, n))
-    C = jax.random.normal(ks[0], (b, s, n))
-    y, _ = S.ssd_scan(x, dt, A, B, C, chunk)
-    y_ref, _ = _naive_ssd(x, dt, A, B, C)
-    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=1e-3, atol=1e-3)
+if st is None:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_ssd_property():
+        pass
+else:
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**30), s=st.sampled_from([8, 16, 24]),
+           chunk=st.sampled_from([4, 8]))
+    def test_ssd_property(seed, s, chunk):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+        b, h, p, n = 1, 2, 3, 4
+        x = jax.random.normal(ks[0], (b, s, h, p))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+        A = jnp.abs(jax.random.normal(ks[2], (h,))) + 0.1
+        B = jax.random.normal(ks[3], (b, s, n))
+        C = jax.random.normal(ks[0], (b, s, n))
+        y, _ = S.ssd_scan(x, dt, A, B, C, chunk)
+        y_ref, _ = _naive_ssd(x, dt, A, B, C)
+        np.testing.assert_allclose(np.asarray(y), y_ref, rtol=1e-3,
+                                   atol=1e-3)
 
 
 def test_ssm_decode_matches_forward():
