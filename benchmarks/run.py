@@ -327,6 +327,51 @@ def bench_grouped_step():
     (ROOT / "BENCH_grouped_step.json").write_text(json.dumps(out, indent=2))
 
 
+def bench_planner():
+    """Heterogeneous planner search over a 16-device mixed cluster
+    (8xGPU + 8xCPU): full (g, alloc) sweep + discrete-event validation of
+    the chosen plan. Emits BENCH_planner.json; the whole search must stay
+    under 5 s (it is the inner loop of cluster bring-up)."""
+    from repro import cluster
+
+    devices = cluster.parse_cluster_spec(
+        "8xgpu-g2.2xlarge,8xcpu-c4.4xlarge")
+    cost = cluster.WorkloadCost(flops_per_example=2e9,
+                                bytes_per_example=2e8, grad_bytes=4e6)
+    batch, t_fc = 64, 0.002
+
+    t0 = time.perf_counter()
+    plan = cluster.best_allocation(devices, global_batch=batch, t_fc=t_fc,
+                                   cost=cost, mu_star_total=0.9)
+    search_s = time.perf_counter() - t0
+
+    sim = cluster.simulate_hetero(t_conv=plan.group_times, t_fc=t_fc,
+                                  iters=3000, exponential=False)
+    err = abs(sim.time_per_iteration - plan.t_iteration) / plan.t_iteration
+    _row("planner_search", search_s * 1e6,
+         f"g*={plan.g};t_iter={plan.t_iteration*1e3:.3f}ms;"
+         f"sim_err={err:.1%};under_5s={search_s < 5.0}")
+
+    rows = []
+    for g in (1, 2, 4, 8, 16):
+        p = cluster.plan_for_g(devices, g, global_batch=batch, t_fc=t_fc,
+                               cost=cost, mu_star_total=0.9)
+        rows.append({"g": g, "t_iteration_s": p.t_iteration,
+                     "se_penalty": p.se_penalty,
+                     "time_score_s": p.time_score,
+                     "microbatches": list(p.allocation.microbatches)})
+        _row(f"planner_g{g}", p.t_iteration * 1e6,
+             f"P_SE={p.se_penalty:.2f};score={p.time_score*1e3:.3f}ms")
+
+    out = {"bench": "planner",
+           "cluster": "8xgpu-g2.2xlarge,8xcpu-c4.4xlarge",
+           "global_batch": batch, "t_fc": t_fc,
+           "search_s": search_s, "best_g": plan.g,
+           "best_microbatches": list(plan.allocation.microbatches),
+           "analytic_vs_sim_err": err, "rows": rows}
+    (ROOT / "BENCH_planner.json").write_text(json.dumps(out, indent=2))
+
+
 def roofline_table():
     d = ROOT / "experiments" / "dryrun"
     rows = sorted(d.glob("*__16x16.json"))
@@ -349,7 +394,8 @@ def roofline_table():
 BENCHES = [fig4_lowering_blocksize, fig5_he_model, fig6_implicit_momentum,
            fig7_tradeoff, fig13_momentum_lesion, fig23_batch_size,
            fig32_rnn_tradeoff, fig33_schedules,
-           table_optimizer_vs_bayes, bench_grouped_step, roofline_table]
+           table_optimizer_vs_bayes, bench_grouped_step, bench_planner,
+           roofline_table]
 
 
 def main() -> None:

@@ -1,14 +1,26 @@
 """End-to-end Algorithm 1 demo (the paper's automatic optimizer) on the CNN
 workload family the paper studies: cold start -> epoch-wise grid search with
 the mu*=0 => halve-g rule -> trained model. Compares against fixed sync and
-fixed fully-async strategies.
+fixed fully-async strategies. Then the heterogeneous half: black-box-profile
+this container's actual jitted step, plan a mixed 8xGPU+8xCPU cluster with
+the time-to-convergence planner, validate the plan against the
+discrete-event simulator and train at the planned allocation with
+share-weighted grouped updates.
 
   PYTHONPATH=src python examples/autotune.py
 """
+import dataclasses
+
+import jax
+import jax.numpy as jnp
 import numpy as np
 
+from repro import cluster
 from repro.core import hardware_model as hm
+from repro.core.async_sgd import make_grouped_train_step
 from repro.core.auto_optimizer import algorithm1
+from repro.core.compute_groups import group_batch_split
+from repro.core.implicit_momentum import optimal_explicit_momentum
 from repro.core.stat_model import iterations_to_loss
 from repro.core.workload import cnn_classify, init_state, make_runner
 
@@ -22,6 +34,61 @@ def fixed_strategy(runner, state, g, mu, eta, steps=400):
     ph = hm.PhaseTimes(t_conv_compute_1=1.0, t_fc=0.06, conv_grad_bytes=0.0)
     he = hm.he_time_per_iteration(g, N_DEVICES, ph)
     return it, he, (he * it if it else None)
+
+
+def hetero_plan_and_train(wl, runner, state):
+    """Profile -> plan -> validate -> train on a mixed 8xGPU+8xCPU cluster."""
+    params = state[0]
+    batch0 = jax.tree.map(lambda x: x[0],
+                          wl.sample_batches(jax.random.PRNGKey(7), 1,
+                                            wl.batch_size))
+    # black-box probe: time THIS container's jitted step — the planner only
+    # ever sees examples/s, never what the device is
+    vg = jax.jit(jax.value_and_grad(wl.loss_fn))
+    local = cluster.profiled_spec(
+        cluster.DeviceSpec("local-cpu", "cpu", peak_flops=1e12, mem_bw=1e11,
+                           net_bw=1.25e9),
+        vg, (params, batch0), batch_size=wl.batch_size)
+    print(f"  profiled local-cpu: {local.throughput:.0f} examples/s")
+    # a simulated GPU node: same black-box contract, 6x the measured rate
+    gpu = dataclasses.replace(cluster.get_device("gpu-g2.2xlarge"),
+                              name="sim-gpu", throughput=6.0 * local.throughput)
+    devices = (gpu,) * 8 + (local,) * 8
+    t_fc = 0.06 * wl.batch_size / local.throughput   # merged-FC service time
+    plan = cluster.best_allocation(devices, global_batch=wl.batch_size,
+                                   t_fc=t_fc, mu_star_total=0.9)
+    print(plan.describe())
+    sim = cluster.simulate_hetero(t_conv=plan.group_times, t_fc=t_fc,
+                                  iters=2000, exponential=False)
+    err = abs(sim.time_per_iteration - plan.t_iteration) / plan.t_iteration
+    print(f"  sim {sim.time_per_iteration * 1e3:.2f}ms/it vs analytic "
+          f"{plan.t_iteration * 1e3:.2f}ms/it (err {err:.1%}), "
+          f"mean staleness {sim.mean_staleness:.2f}")
+
+    # train at the planned allocation: throughput-proportional microbatches
+    # + share-weighted grouped updates (merged-FC head included)
+    mu = optimal_explicit_momentum(plan.g, 0.9)
+    step = jax.jit(make_grouped_train_step(
+        wl.loss_fn, num_groups=plan.g, lr=0.05, momentum=mu,
+        head_filter=wl.head_filter, group_weights=plan.weights))
+    mom = jax.tree.map(jnp.zeros_like, params)
+    batches = wl.sample_batches(jax.random.PRNGKey(11), 60, wl.batch_size)
+    p = params
+    losses = []
+    for t in range(60):
+        b = jax.tree.map(lambda x: x[t], batches)
+        gb = group_batch_split(b, plan.g, sizes=plan.allocation.microbatches)
+        p, mom, loss = step(p, mom, gb)
+        losses.append(float(loss))
+    print(f"  weighted grouped train @ g={plan.g}, mu={mu:.2f}: "
+          f"loss {losses[0]:.4f} -> {np.mean(losses[-5:]):.4f}")
+
+    # and Algorithm 1 seeded by the planner instead of the homogeneous
+    # FC-saturation short-circuit
+    res = algorithm1(runner, state, n_devices=len(devices), epochs=1,
+                     epoch_steps=120, probe_steps=40, plan=plan)
+    print(f"  algorithm1(plan) started at g={plan.g}, settled at "
+          f"g={res.g}, mu={res.mu}, eta={res.eta}")
 
 
 def main():
@@ -39,7 +106,6 @@ def main():
     print(f"  chose g={res.g}, mu={res.mu}, eta={res.eta}")
 
     print("== fixed strategies (paper Fig. 7 comparison) ==")
-    from repro.core.implicit_momentum import optimal_explicit_momentum
     mu_chosen = optimal_explicit_momentum(res.g, 0.9)
     for name, g, mu in (("sync", 1, 0.9), ("async", N_DEVICES, 0.0),
                         (f"omnivore(g={res.g})", res.g, mu_chosen)):
@@ -49,6 +115,9 @@ def main():
     # On this small, fast-converging CPU workload the optimizer picks a
     # low-asynchrony strategy — the same conclusion the paper reaches on its
     # CPU-S cluster (§VI-B3), where fully-synchronous won.
+
+    print("== heterogeneous cluster: profile -> plan -> train ==")
+    hetero_plan_and_train(wl, runner, state)
     print("OK")
 
 

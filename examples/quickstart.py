@@ -5,7 +5,6 @@ groups, then greedy-decode from it. Runs on CPU in ~1 minute.
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.core.async_sgd import make_grouped_train_step

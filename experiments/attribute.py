@@ -4,8 +4,11 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 import sys
 sys.path.insert(0, "/root/repo/src")
-import re, collections, argparse
-import jax, jax.numpy as jnp
+import argparse
+import collections
+import re
+import jax
+import jax.numpy as jnp
 from repro.configs import get_config, INPUT_SHAPES
 from repro.configs.base import TrainConfig
 from repro.launch import steps as ST
@@ -15,7 +18,8 @@ from repro.sharding import rules as SH
 import repro.launch.hlo_parse as HP
 
 def compile_pair(arch, shape_name, accum=None):
-    cfg = get_config(arch); shape = INPUT_SHAPES[shape_name]
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
     mesh = make_production_mesh()
     a = accum if accum is not None else (GRAD_ACCUM.get(arch, 1) if shape.kind == "train" else 1)
     tc = TrainConfig(grad_accum=a)
@@ -44,19 +48,27 @@ def compile_pair(arch, shape_name, accum=None):
 def attribute(txt, top=12):
     comps = HP.split_computations(txt)
     entry = re.search(r"ENTRY\s+%?([\w.\-]+)", txt).group(1)
-    mult = {n: 0.0 for n in comps}; mult[entry] = 1.0
-    order=[entry]; seen={entry}; i=0
+    mult = {n: 0.0 for n in comps}
+    mult[entry] = 1.0
+    order = [entry]
+    seen = {entry}
+    i = 0
     while i < len(order):
-        c = order[i]; i += 1
-        comp = comps[c]; base = mult[c]
+        c = order[i]
+        i += 1
+        comp = comps[c]
+        base = mult[c]
         for line in comp.lines:
-            body = re.search(r"body=%?([\w.\-]+)", line); cond = re.search(r"condition=%?([\w.\-]+)", line)
+            body = re.search(r"body=%?([\w.\-]+)", line)
+            cond = re.search(r"condition=%?([\w.\-]+)", line)
             if re.search(r"\bwhile\(", line) and body and cond and body.group(1) in comps:
                 t = HP._find_trip_count(comps[cond.group(1)]) if cond.group(1) in comps else 1
                 for callee, f in ((body.group(1), t), (cond.group(1), t+1)):
                     if callee in comps:
                         mult[callee] += base*f
-                        if callee not in seen: seen.add(callee); order.append(callee)
+                        if callee not in seen:
+                            seen.add(callee)
+                            order.append(callee)
                 continue
             cm = HP._CALL_RE.search(line)
             if cm:
@@ -64,16 +76,21 @@ def attribute(txt, top=12):
                     callee = callee.lstrip("%")
                     if callee in comps:
                         mult[callee] += base
-                        if callee not in seen: seen.add(callee); order.append(callee)
+                        if callee not in seen:
+                            seen.add(callee)
+                            order.append(callee)
     agg = collections.Counter()
     for name, comp in comps.items():
         w = mult.get(name, 0)
-        if w <= 0: continue
+        if w <= 0:
+            continue
         for line in comp.lines:
             m = re.search(r"\b(all-reduce|all-gather|all-to-all|collective-permute|reduce-scatter)(?:-start)?\(", line)
-            if not m or "-done(" in line: continue
+            if not m or "-done(" in line:
+                continue
             d = HP._DEF_RE.match(line)
-            if not d: continue
+            if not d:
+                continue
             rs = HP._SHAPE_RE.match(d.group(2))
             b = HP._shape_bytes(*rs.groups()) if rs else 0
             meta = re.search(r'op_name="([^"]+)"', line)
@@ -84,7 +101,9 @@ def attribute(txt, top=12):
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
-    ap.add_argument("arch"); ap.add_argument("shape"); ap.add_argument("--accum", type=int)
+    ap.add_argument("arch")
+    ap.add_argument("shape")
+    ap.add_argument("--accum", type=int)
     args = ap.parse_args()
     c = compile_pair(args.arch, args.shape, args.accum)
     attribute(c.as_text())

@@ -1,5 +1,6 @@
 """Regenerate EXPERIMENTS.md baseline tables from dryrun JSONs."""
-import json, glob
+import glob
+import json
 from pathlib import Path
 
 rows = {}
@@ -20,7 +21,8 @@ out.append("|---|---|---|---|---|---|---|---|---|---|---|")
 for a in ARCHS:
     for s in SHAPES:
         d = rows.get((a, s, "16x16"))
-        if d is None: continue
+        if d is None:
+            continue
         if d["status"] != "ok":
             out.append(f"| {a} | {s} | {d['status']} | — | — | — | — | — | — | — | — |")
             continue
@@ -35,7 +37,8 @@ out.append("|---|---|---|---|---|---|---|")
 for a in ARCHS:
     for s in SHAPES:
         d = rows.get((a, s, "2x16x16"))
-        if d is None: continue
+        if d is None:
+            continue
         if d["status"] != "ok":
             out.append(f"| {a} | {s} | {d['status']} | — | — | — | — |")
             continue

@@ -1,0 +1,23 @@
+"""Heterogeneous cluster subsystem (paper §V's third contribution).
+
+Black-box device profiles (``devices``), throughput-proportional group
+allocation (``allocator``), heterogeneous queue simulation (``sim``) and
+the time-to-convergence planner ``T(g, alloc) = HE x SE`` (``planner``).
+"""
+from repro.cluster.allocator import Allocation, allocate, rebalance
+from repro.cluster.devices import (DeviceSpec, WorkloadCost, get_device,
+                                   list_devices, parse_cluster_spec,
+                                   profile_device, profiled_spec,
+                                   register_device)
+from repro.cluster.planner import (Plan, best_allocation,
+                                   hetero_time_per_iteration, plan_for_g)
+from repro.cluster.sim import simulate_hetero
+
+__all__ = [
+    "Allocation", "allocate", "rebalance",
+    "DeviceSpec", "WorkloadCost", "get_device", "list_devices",
+    "parse_cluster_spec", "profile_device", "profiled_spec",
+    "register_device",
+    "Plan", "best_allocation", "hetero_time_per_iteration", "plan_for_g",
+    "simulate_hetero",
+]

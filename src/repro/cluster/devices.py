@@ -1,0 +1,158 @@
+"""Black-box device profiles — the heterogeneity premise of paper §V.
+
+The paper's predictive model treats every node as a *black box* with a
+measured throughput: the optimizer never inspects what the device is, only
+how many examples per second it pushes through the actual training step.
+This module provides both halves of that premise:
+
+- ``DeviceSpec``: a named roofline profile (CPU / GPU / TPU) that can
+  *predict* throughput for a workload cost when no measurement exists
+  (planning before the cluster is up), and
+- ``profile_device``: the black-box probe that *measures* a jitted step on
+  the device actually running, returning a spec whose ``throughput`` field
+  overrides the roofline.
+
+Specs are consumed by ``cluster.allocator`` (group packing + batch shares)
+and ``cluster.planner`` (time-to-convergence search).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+import time
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadCost:
+    """Per-example cost of one training step + the collective payload."""
+    flops_per_example: float     # fwd+bwd FLOPs for ONE example
+    bytes_per_example: float     # HBM/DRAM traffic for ONE example
+    grad_bytes: float = 0.0      # gradient payload reduced within a group
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceSpec:
+    """One device, roofline profile + optional black-box measurement.
+
+    ``throughput`` (examples/s), when set, is a *measurement* and takes
+    precedence over the roofline prediction — the paper's "each node is a
+    black box" contract.
+    """
+    name: str
+    kind: str                    # "cpu" | "gpu" | "tpu"
+    peak_flops: float            # FLOP/s
+    mem_bw: float                # bytes/s
+    net_bw: float                # bytes/s to the reduction / parameter server
+    throughput: Optional[float] = None   # measured examples/s (black box)
+
+    def predict_throughput(self, cost: Optional[WorkloadCost] = None) -> float:
+        """Examples/s: the measurement if present, else the roofline."""
+        if self.throughput is not None:
+            return self.throughput
+        if cost is None:
+            raise ValueError(
+                f"device {self.name!r} has no measured throughput; "
+                "pass a WorkloadCost for the roofline prediction")
+        t = max(cost.flops_per_example / self.peak_flops,
+                cost.bytes_per_example / self.mem_bw)
+        if t <= 0.0:
+            raise ValueError("WorkloadCost must be positive")
+        return 1.0 / t
+
+
+# ---------------------------------------------------------------------------
+# Registry. Constants: EC2 c4/g2 are the paper's CPU/GPU cluster nodes
+# (§VI-A); titan-x its workstation GPU; tpu-v5e mirrors
+# core.hardware_model.V5E so the homogeneous model and this subsystem agree.
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, DeviceSpec] = {}
+
+
+def register_device(spec: DeviceSpec) -> DeviceSpec:
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get_device(name: str) -> DeviceSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown device {name!r}; known: {sorted(_REGISTRY)}") from None
+
+
+def list_devices() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+register_device(DeviceSpec("cpu-c4.4xlarge", "cpu",
+                           peak_flops=0.45e12, mem_bw=60e9, net_bw=1.25e9))
+register_device(DeviceSpec("gpu-g2.2xlarge", "gpu",
+                           peak_flops=2.4e12, mem_bw=160e9, net_bw=1.25e9))
+register_device(DeviceSpec("gpu-titan-x", "gpu",
+                           peak_flops=6.6e12, mem_bw=336e9, net_bw=1.25e9))
+register_device(DeviceSpec("tpu-v5e", "tpu",
+                           peak_flops=197e12, mem_bw=819e9, net_bw=50e9))
+
+
+_SPEC_ITEM = re.compile(r"^(?:(\d+)x)?([A-Za-z0-9_.\-]+)$")
+
+
+def parse_cluster_spec(spec: str) -> Tuple[DeviceSpec, ...]:
+    """Parse ``"8xgpu-g2.2xlarge,8xcpu-c4.4xlarge"`` into device instances."""
+    devices = []
+    for item in spec.split(","):
+        item = item.strip()
+        if not item:
+            continue
+        m = _SPEC_ITEM.match(item)
+        if not m:
+            raise ValueError(f"bad cluster-spec item {item!r} "
+                             "(expected [<count>x]<device-name>)")
+        count = int(m.group(1) or 1)
+        if count < 1:
+            raise ValueError(f"bad device count in {item!r}")
+        devices.extend([get_device(m.group(2))] * count)
+    if not devices:
+        raise ValueError(f"empty cluster spec {spec!r}")
+    return tuple(devices)
+
+
+# ---------------------------------------------------------------------------
+# Black-box probe
+# ---------------------------------------------------------------------------
+
+def profile_device(step_fn: Callable, args: Sequence, *, batch_size: int,
+                   warmup: int = 1, iters: int = 5) -> float:
+    """Time the actual jitted training step and return examples/s.
+
+    ``step_fn(*args)`` is run ``warmup`` untimed calls (absorbing jit
+    compilation) then ``iters`` timed calls; the median wall time is the
+    black-box service time. The probe never looks inside the step — that is
+    the point.
+    """
+    if batch_size < 1:
+        raise ValueError("batch_size must be >= 1")
+    for _ in range(warmup):
+        jax.block_until_ready(step_fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(step_fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    median = times[len(times) // 2]
+    return batch_size / median
+
+
+def profiled_spec(spec: DeviceSpec, step_fn: Callable, args: Sequence, *,
+                  batch_size: int, warmup: int = 1, iters: int = 5
+                  ) -> DeviceSpec:
+    """Return ``spec`` with its black-box ``throughput`` field measured."""
+    thr = profile_device(step_fn, args, batch_size=batch_size,
+                         warmup=warmup, iters=iters)
+    return dataclasses.replace(spec, throughput=thr)

@@ -1,0 +1,138 @@
+"""Time-to-convergence planner over heterogeneous allocations.
+
+The paper's predictive model (§V, App E) picks an execution strategy by
+minimizing  total time = HE x SE : seconds/iteration times iterations to
+target. This module generalizes the HE half to heterogeneous groups and
+composes it with the statistical model:
+
+    T(g, alloc) = HE(g, alloc) * P_SE(g)
+
+- ``group_conv_times``: per-group conv-phase service time from the
+  allocation — microbatch / group throughput, overlapped (max) with the
+  intra-group collective over the slowest link, mirroring
+  ``hardware_model.t_conv``.
+- ``hetero_time_per_iteration``: g heterogeneous groups feeding one serial
+  merged-FC server. Each group cycles every ``t_i + t_fc`` when the server
+  is free, so the aggregate update rate is ``sum_i 1/(t_i + t_fc)`` capped
+  by the server rate ``1/t_fc``:
+
+      HE = max( t_fc,  1 / sum_i 1/(t_i + t_fc) )
+
+  With g identical groups this is exactly
+  ``hardware_model.he_time_per_iteration``'s
+  ``max(t_fc, (t_conv + t_fc)/g)``.
+- ``best_allocation``: search over (g, alloc) — ``allocator.allocate`` for
+  each candidate g, score by ``HE * predict_se_penalty(g, mu*)``, return
+  the best ``Plan``. ``Plan.g`` seeds ``auto_optimizer.algorithm1``
+  (its ``plan=`` argument) in place of the homogeneous
+  ``smallest_saturating_g`` short-circuit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+from repro.cluster.allocator import Allocation, allocate
+from repro.cluster.devices import DeviceSpec, WorkloadCost
+from repro.core.stat_model import predict_se_penalty
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """One point of the (g, alloc) search, fully scored."""
+    g: int
+    allocation: Allocation
+    group_times: Tuple[float, ...]   # per-group conv service time, seconds
+    t_iteration: float               # predicted HE seconds/iteration
+    se_penalty: float                # P_SE(g), >= 1
+    time_score: float                # t_iteration * se_penalty
+
+    @property
+    def weights(self) -> Tuple[float, ...]:
+        return self.allocation.weights
+
+    def describe(self) -> str:
+        rows = []
+        for i, (idxs, t) in enumerate(zip(self.allocation.groups,
+                                          self.group_times)):
+            kinds = [self.allocation.devices[j].kind for j in idxs]
+            mix = "+".join(f"{kinds.count(k)}{k}" for k in sorted(set(kinds)))
+            rows.append(f"  group {i}: {mix:12s} batch="
+                        f"{self.allocation.microbatches[i]:4d} "
+                        f"t_conv={t * 1e3:.2f}ms")
+        return (f"plan g={self.g} t_iter={self.t_iteration * 1e3:.2f}ms "
+                f"P_SE={self.se_penalty:.2f} "
+                f"score={self.time_score * 1e3:.2f}ms\n" + "\n".join(rows))
+
+
+def group_collective_time(devices: Sequence[DeviceSpec],
+                          grad_bytes: float) -> float:
+    """Ring reduce-scatter + all-gather within a group, paced by the
+    slowest link (same form as ``hardware_model.collective_time``)."""
+    k = len(devices)
+    if k <= 1 or grad_bytes <= 0.0:
+        return 0.0
+    bw = min(d.net_bw for d in devices)
+    return 2.0 * grad_bytes * (k - 1) / k / bw
+
+
+def group_conv_times(alloc: Allocation,
+                     cost: Optional[WorkloadCost] = None
+                     ) -> Tuple[float, ...]:
+    """Per-group conv-phase time: compute on the group's microbatch,
+    overlapped (max) with its intra-group collective."""
+    times = []
+    grad_bytes = cost.grad_bytes if cost is not None else 0.0
+    for i in range(alloc.num_groups):
+        comp = alloc.microbatches[i] / alloc.throughputs[i]
+        coll = group_collective_time(alloc.group_devices(i), grad_bytes)
+        times.append(max(comp, coll))
+    return tuple(times)
+
+
+def hetero_time_per_iteration(group_times: Sequence[float],
+                              t_fc: float) -> float:
+    """HE seconds/iteration for heterogeneous groups + one serial FC server."""
+    if not group_times:
+        raise ValueError("need at least one group")
+    rate = sum(1.0 / (t + t_fc) for t in group_times)
+    return max(t_fc, 1.0 / rate)
+
+
+def plan_for_g(devices: Sequence[DeviceSpec], g: int, *, global_batch: int,
+               t_fc: float, cost: Optional[WorkloadCost] = None,
+               mu_star_total: float = 0.9,
+               se_sharpness: float = 4.0) -> Plan:
+    """Score one candidate g: allocate, predict HE, multiply by P_SE."""
+    alloc = allocate(devices, g, global_batch, cost=cost)
+    times = group_conv_times(alloc, cost)
+    t_iter = hetero_time_per_iteration(times, t_fc)
+    pse = predict_se_penalty(g, mu_star_total, sharpness=se_sharpness)
+    return Plan(g=g, allocation=alloc, group_times=times, t_iteration=t_iter,
+                se_penalty=pse, time_score=t_iter * pse)
+
+
+def best_allocation(devices: Sequence[DeviceSpec], *, global_batch: int,
+                    t_fc: float, cost: Optional[WorkloadCost] = None,
+                    mu_star_total: float = 0.9, se_sharpness: float = 4.0,
+                    g_candidates: Optional[Sequence[int]] = None) -> Plan:
+    """Search (g, alloc) for the minimum predicted time-to-convergence.
+
+    Default candidate set is every feasible g (1..min(N, global_batch) —
+    each group needs a device and at least one example). Returns the best
+    ``Plan``; ties break toward smaller g (less staleness for free).
+    """
+    n = len(devices)
+    if g_candidates is None:
+        g_candidates = range(1, min(n, global_batch) + 1)
+    best: Optional[Plan] = None
+    for g in g_candidates:
+        if not 1 <= g <= min(n, global_batch):
+            raise ValueError(f"candidate g={g} infeasible for N={n}, "
+                             f"batch={global_batch}")
+        plan = plan_for_g(devices, g, global_batch=global_batch, t_fc=t_fc,
+                          cost=cost, mu_star_total=mu_star_total,
+                          se_sharpness=se_sharpness)
+        if best is None or plan.time_score < best.time_score:
+            best = plan
+    return best

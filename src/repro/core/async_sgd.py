@@ -25,13 +25,14 @@ Both reduce exactly to synchronous data-parallel SGD at g=1.
 """
 from __future__ import annotations
 
-from typing import Callable, Optional
+from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.fused_update.ops import fused_group_update
-from repro.optim.closed_form import grouped_coeffs, head_coeffs
+from repro.optim.closed_form import (_weight_scales, grouped_coeffs,
+                                     head_coeffs)
 from repro.optim.sgd import sgd_update
 
 
@@ -85,12 +86,19 @@ def delayed_sgd_run(loss_fn: Callable, params, batches, *, staleness: int,
 # ---------------------------------------------------------------------------
 
 def scan_grouped_update(params, grads, mom_buf, *, lr: float, momentum: float,
-                        weight_decay: float = 0.0, head_mask=None):
+                        weight_decay: float = 0.0, head_mask=None,
+                        group_weights: Optional[Sequence[float]] = None):
     """Reference O(g) update application: the literal sequential scan over
     the g sub-steps (plus the merged-FC head update). ``grads`` carries a
     leading (g, ...) group axis per leaf. Returns (params, mom_buf).
     Argument order matches ``sgd_update`` and ``fused_group_update`` so the
     strategies are drop-in interchangeable.
+
+    ``group_weights`` (unequal batch shares, ``cluster.allocator``): group
+    i's gradient is pre-scaled by ``g * w_i / sum(w)`` before every use, so
+    the head sees the share-weighted average and sub-step i a share-scaled
+    step. Uniform weights scale by exactly 1.0 — bitwise the unweighted
+    path.
 
     Kept as the semantic oracle for the fused closed-form path — it pays
     g read-modify-write passes over every leaf and a per-leaf fp32 cast
@@ -100,13 +108,20 @@ def scan_grouped_update(params, grads, mom_buf, *, lr: float, momentum: float,
     g = jax.tree.leaves(grads)[0].shape[0]
     if head_mask is None:
         head_mask = jax.tree.map(lambda _: False, params)
+    scales = _weight_scales(g, group_weights)
+    if scales is not None:
+        sarr = jnp.asarray(scales, jnp.float32)
+        grads = jax.tree.map(
+            lambda gr: gr * sarr.reshape((g,) + (1,) * (gr.ndim - 1)).astype(
+                gr.dtype), grads)
 
     if g == 1:
         grads0 = jax.tree.map(lambda gr: gr[0], grads)
         return sgd_update(params, grads0, mom_buf, lr=lr, momentum=momentum,
                           weight_decay=weight_decay)
 
-    # merged-FC head: single synchronous averaged update per round
+    # merged-FC head: single synchronous (share-weighted) averaged update
+    # per round — with pre-scaled gradients the plain mean is that average
     head_grads = jax.tree.map(lambda gr: gr.mean(axis=0), grads)
 
     def upd_leaf(p, gg, v):
@@ -148,7 +163,8 @@ def make_grouped_train_step(loss_fn: Callable, *, num_groups: int, lr: float,
                             head_filter: Optional[Callable] = None,
                             grad_accum: int = 1, strategy: str = "fused",
                             update_impl: str = "xla",
-                            interpret: Optional[bool] = None):
+                            interpret: Optional[bool] = None,
+                            group_weights: Optional[Sequence[float]] = None):
     """Build ``step(params, mom_buf, batches) -> (params, mom_buf, loss)``.
 
     ``batches``: pytree with leading axis ``(g, ...)`` (one microbatch per
@@ -165,16 +181,26 @@ def make_grouped_train_step(loss_fn: Callable, *, num_groups: int, lr: float,
     reference. ``update_impl``: "xla" or "pallas" leaf kernel for the
     fused path; ``interpret`` forces the Pallas interpreter (default:
     compile natively on TPU, interpret elsewhere).
+
+    ``group_weights``: per-group batch shares from a heterogeneous
+    allocation (``cluster.allocator.Allocation.weights``). Gradients are
+    weighted ``g * w_i / sum(w)`` per sub-step and ``w_i / sum(w)`` in the
+    merged-FC head average; uniform weights reproduce the equal-share path
+    exactly.
     """
     if strategy not in ("fused", "scan"):
         raise ValueError(f"unknown strategy {strategy!r}")
+    if group_weights is not None:
+        group_weights = tuple(float(w) for w in group_weights)
     # interpret=None flows through to the leaf dispatch, which resolves it
     # (compile natively on TPU, interpret elsewhere) in one place
     g = num_groups
     coeffs = grouped_coeffs(g, lr=lr, momentum=momentum,
-                            weight_decay=weight_decay)
+                            weight_decay=weight_decay,
+                            group_weights=group_weights)
     hcoeffs = head_coeffs(g, lr=lr, momentum=momentum,
-                          weight_decay=weight_decay)
+                          weight_decay=weight_decay,
+                          group_weights=group_weights)
 
     def per_group_grad(params, batch):
         if grad_accum == 1:
@@ -200,7 +226,8 @@ def make_grouped_train_step(loss_fn: Callable, *, num_groups: int, lr: float,
         if strategy == "scan":
             params, mom_buf = scan_grouped_update(
                 params, grads, mom_buf, lr=lr, momentum=momentum,
-                weight_decay=weight_decay, head_mask=head_mask)
+                weight_decay=weight_decay, head_mask=head_mask,
+                group_weights=group_weights)
         else:
             params, mom_buf = fused_group_update(
                 params, grads, mom_buf, coeffs=coeffs, head_coeffs=hcoeffs,

@@ -105,9 +105,15 @@ def cold_start(runner: Runner, state, *, probe_steps: int,
 def algorithm1(runner: Runner, state, *, n_devices: int, epochs: int,
                epoch_steps: int, probe_steps: int,
                phase_times: Optional[hm.PhaseTimes] = None,
-               g0: Optional[int] = None,
+               g0: Optional[int] = None, plan=None,
                mus: Sequence[float] = DEFAULT_MUS) -> OptimizerResult:
-    """Full Algorithm 1 with cold start and HE short-circuit."""
+    """Full Algorithm 1 with cold start and HE short-circuit.
+
+    Initial g precedence: explicit ``g0`` > ``plan`` (a
+    ``cluster.planner.Plan`` — or anything with a ``.g`` — from the
+    heterogeneous time-to-convergence search) > homogeneous ``phase_times``
+    FC-saturation short-circuit > fully async (g = N).
+    """
     decisions: List[Decision] = []
     all_losses: List[np.ndarray] = []
 
@@ -119,9 +125,14 @@ def algorithm1(runner: Runner, state, *, n_devices: int, epochs: int,
     decisions.append(Decision("cold", 1, mu, eta, _final_loss(losses)))
     eta_last, mu_last = eta, mu
 
-    # --- initial g: smallest FC-saturating value (App E-C1), else N ---
+    # --- initial g: explicit > planner > smallest FC-saturating (App
+    # E-C1) > N ---
     if g0 is not None:
         g = g0
+    elif plan is not None:
+        g = int(plan.g)
+        if not 1 <= g <= n_devices:
+            raise ValueError(f"plan.g={g} infeasible for N={n_devices}")
     elif phase_times is not None:
         g = hm.smallest_saturating_g(n_devices, phase_times)
     else:

@@ -11,8 +11,10 @@ batch so axis 0 enumerates groups.
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional, Sequence
 
 import jax
+import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,11 +41,49 @@ class GroupSpec:
         return 1.0 - 1.0 / self.num_groups
 
 
-def group_batch_split(batch, g: int):
-    """Reshape every leaf (B, ...) -> (g, B/g, ...): one microbatch per group."""
+def group_batch_split(batch, g: int, sizes: Optional[Sequence[int]] = None):
+    """Split every leaf (B, ...) into one microbatch per group, axis 0 = g.
+
+    Equal shares (``sizes=None``): reshape (B, ...) -> (g, B/g, ...).
+
+    Unequal shares (``sizes`` from a heterogeneous allocation,
+    ``cluster.allocator.Allocation.microbatches``): each group gets its own
+    contiguous slice, wrap-filled (examples cycled) to ``max(sizes)`` so all
+    microbatches share a shape for the SPMD vmap. Wrapping repeats a
+    group's earliest examples, biasing that group's *internal* mean by
+    O(1/b) — the cross-group weighting must come from
+    ``make_grouped_train_step(group_weights=...)``, not from here.
+    """
+    if sizes is not None:
+        sizes = tuple(int(s) for s in sizes)
+        if len(sizes) != g:
+            raise ValueError(f"need {g} sizes, got {len(sizes)}")
+        if any(s < 1 for s in sizes):
+            raise ValueError(f"every group needs >= 1 example, got {sizes}")
+        if len(set(sizes)) > 1:
+            return _group_batch_split_sized(batch, sizes)
+        # equal sizes: fall through to the plain reshape
+
     def split(x):
         b = x.shape[0]
+        if sizes is not None and b != sum(sizes):
+            raise ValueError(f"batch {b} != sum(sizes)={sum(sizes)}")
         if b % g:
             raise ValueError(f"batch {b} not divisible by g={g}")
         return x.reshape(g, b // g, *x.shape[1:])
+    return jax.tree.map(split, batch)
+
+
+def _group_batch_split_sized(batch, sizes: Sequence[int]):
+    """Ragged split stacked to (g, max(sizes), ...) by cycling each group's
+    own slice (static gather — sizes are Python ints)."""
+    g, total, bmax = len(sizes), sum(sizes), max(sizes)
+    offsets = np.cumsum([0] + list(sizes[:-1]))
+    idx = np.concatenate([off + (np.arange(bmax) % s)
+                          for off, s in zip(offsets, sizes)])
+
+    def split(x):
+        if x.shape[0] != total:
+            raise ValueError(f"batch {x.shape[0]} != sum(sizes)={total}")
+        return x[idx].reshape(g, bmax, *x.shape[1:])
     return jax.tree.map(split, batch)

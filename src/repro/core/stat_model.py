@@ -8,6 +8,7 @@
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, Optional, Sequence
 
 import numpy as np
@@ -43,17 +44,40 @@ class TradeoffPoint:
         return self.he_time * self.se_iters
 
 
+def penalty_ratio(value, baseline) -> Optional[float]:
+    """Normalized penalty with explicit degenerate-case semantics.
+
+    ``None``     — unknown: either side never reached the target
+                   (``se_iters is None``).
+    ``math.inf`` — the sync baseline hit the target instantly (0
+                   iterations) but this point didn't: infinitely worse.
+    ``1.0``      — both sides are 0: equally instant.
+
+    (A plain truthiness test, as previously used, silently collapsed a
+    legitimate 0 to "unknown" and a 0 baseline to a ZeroDivisionError.)
+    """
+    if value is None or baseline is None:
+        return None
+    if baseline == 0:
+        return math.inf if value > 0 else 1.0
+    return value / baseline
+
+
 def penalties(points: Dict[int, TradeoffPoint]):
-    """Normalize a {g: point} sweep to the sync point (paper's P_* curves)."""
+    """Normalize a {g: point} sweep to the sync point (paper's P_* curves).
+
+    Requires the sync (g=1) baseline; missing/zero SE data degrades to the
+    explicit ``None``/``math.inf`` semantics of ``penalty_ratio``.
+    """
+    if 1 not in points:
+        raise ValueError("penalties() needs the sync baseline (g=1 point)")
     base = points[1]
     out = {}
     for g, pt in sorted(points.items()):
         out[g] = {
             "P_HE": pt.he_time / base.he_time,
-            "P_SE": (pt.se_iters / base.se_iters
-                     if pt.se_iters and base.se_iters else None),
-            "P_total": (pt.total_time / base.total_time
-                        if pt.total_time and base.total_time else None),
+            "P_SE": penalty_ratio(pt.se_iters, base.se_iters),
+            "P_total": penalty_ratio(pt.total_time, base.total_time),
             "implicit_momentum": implicit_momentum(g),
             "mu": pt.mu, "eta": pt.eta,
         }

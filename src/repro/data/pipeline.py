@@ -11,7 +11,7 @@ small variants used by the optimizer experiments).
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional
+from typing import Iterator
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,6 @@ Usage:
 Results: experiments/dryrun/<arch>__<shape>__<mesh>.json
 """
 import argparse          # noqa: E402
-import dataclasses       # noqa: E402
 import json              # noqa: E402
 import time              # noqa: E402
 import traceback         # noqa: E402
@@ -24,8 +23,7 @@ import jax.numpy as jnp  # noqa: E402
 from repro.configs import INPUT_SHAPES, get_config, list_archs  # noqa: E402
 from repro.configs.base import TrainConfig                      # noqa: E402
 from repro.launch import steps as ST                            # noqa: E402
-from repro.launch.hlo_analysis import (Roofline, model_flops_6nd,  # noqa: E402
-                                       roofline_from_compiled)
+from repro.launch.hlo_analysis import roofline_from_compiled  # noqa: E402
 from repro.launch.mesh import make_production_mesh              # noqa: E402
 from repro.launch.params_util import (active_param_count,       # noqa: E402
                                       param_bytes, param_count)

@@ -4,7 +4,6 @@ train lowers a full SGD-momentum update, prefill lowers forward+cache.
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 from typing import Optional
 

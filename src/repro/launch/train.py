@@ -6,6 +6,13 @@ groups + Algorithm 1):
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-7b --smoke \
       --steps 60 --groups 4 --momentum 0.3 --lr 0.05
 
+Heterogeneous planning (the cluster subsystem picks g, the device->group
+packing and throughput-proportional batch shares; the step then applies
+share-weighted grouped updates):
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-7b --smoke \
+      --steps 20 --cluster-spec 8xgpu-g2.2xlarge,8xcpu-c4.4xlarge --plan
+
 On a real cluster the same driver runs the full config on the production
 mesh (--mesh prod[,multipod]).
 """
@@ -15,13 +22,11 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 
 from repro.checkpoint import checkpointing as CK
 from repro.configs import get_config, get_smoke_config, list_archs
-from repro.configs.base import TrainConfig
 from repro.core.async_sgd import make_grouped_train_step
 from repro.core.compute_groups import GroupSpec, group_batch_split
 from repro.data.pipeline import DataConfig, SyntheticLM, prefetch
@@ -48,9 +53,21 @@ def main(argv=None):
     ap.add_argument("--update-impl", choices=("xla", "pallas"), default="xla",
                     help="leaf kernel for the fused update (pallas runs "
                          "interpret-mode off-TPU)")
+    ap.add_argument("--cluster-spec", type=str, default="",
+                    help="heterogeneous cluster, e.g. "
+                         "'8xgpu-g2.2xlarge,8xcpu-c4.4xlarge' "
+                         "(see repro.cluster.devices registry)")
+    ap.add_argument("--plan", action="store_true",
+                    help="run the time-to-convergence planner over "
+                         "--cluster-spec: picks g, packs devices into "
+                         "groups, splits the batch by throughput and "
+                         "weights the grouped updates accordingly "
+                         "(overrides --groups)")
     ap.add_argument("--ckpt", type=str, default="")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.plan and not args.cluster_spec:
+        ap.error("--plan requires --cluster-spec")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if cfg.arch_type in ("encdec", "vlm"):
@@ -63,25 +80,53 @@ def main(argv=None):
     def loss_fn(p, batch):
         return T.lm_loss(p, batch, cfg)
 
+    groups, group_weights, micro_sizes = args.groups, None, None
+    if args.plan:
+        from repro import cluster
+        devices = cluster.parse_cluster_spec(args.cluster_spec)
+        n_params = sum(int(p.size) for p in jax.tree.leaves(params))
+        # rough transformer roofline: ~6*P FLOPs per token fwd+bwd, one
+        # param sweep of memory traffic per example, fp32 gradient payload
+        cost = cluster.WorkloadCost(
+            flops_per_example=6.0 * n_params * args.seq,
+            bytes_per_example=4.0 * n_params,
+            grad_bytes=4.0 * n_params)
+        # merged-FC phase ~ the unembed matmul on the full batch, served by
+        # the fastest device in the cluster
+        head_flops = 6.0 * cfg.d_model * cfg.vocab_size * args.seq
+        t_fc = args.batch * head_flops / max(d.peak_flops for d in devices)
+        plan = cluster.best_allocation(devices, global_batch=args.batch,
+                                       t_fc=t_fc, cost=cost)
+        print(plan.describe())
+        groups = plan.g
+        group_weights = plan.weights
+        micro_sizes = plan.allocation.microbatches
+
     # donate params/momentum: the fused update rewrites them in place
     # instead of holding both generations live. The Pallas leaf kernel
     # compiles natively on TPU and falls back to interpret mode elsewhere.
     step = jax.jit(make_grouped_train_step(
-        loss_fn, num_groups=args.groups, lr=args.lr, momentum=args.momentum,
+        loss_fn, num_groups=groups, lr=args.lr, momentum=args.momentum,
         weight_decay=args.weight_decay, strategy=args.strategy,
-        update_impl=args.update_impl), donate_argnums=(0, 1))
+        update_impl=args.update_impl, group_weights=group_weights),
+        donate_argnums=(0, 1))
 
     data = SyntheticLM(DataConfig(batch_size=args.batch, seq_len=args.seq,
                                   vocab_size=cfg.vocab_size, seed=args.seed))
-    spec = GroupSpec(num_groups=args.groups,
-                     num_devices=max(args.groups, jax.device_count()))
-    print(f"arch={cfg.name} g={args.groups} S={spec.staleness} "
-          f"mu_implicit={spec.implicit_momentum:.3f}")
+    if args.plan:
+        spec = GroupSpec(num_groups=groups, num_devices=groups)
+        print(f"arch={cfg.name} g={groups} (planned) S={spec.staleness} "
+              f"mu_implicit={spec.implicit_momentum:.3f}")
+    else:
+        spec = GroupSpec(num_groups=groups,
+                         num_devices=max(groups, jax.device_count()))
+        print(f"arch={cfg.name} g={groups} S={spec.staleness} "
+              f"mu_implicit={spec.implicit_momentum:.3f}")
 
     losses = []
     t0 = time.time()
     for i, batch in enumerate(prefetch(data.batches(args.steps))):
-        gb = group_batch_split(batch, args.groups)
+        gb = group_batch_split(batch, groups, sizes=micro_sizes)
         params, mom, loss = step(params, mom, gb)
         losses.append(float(loss))
         if i % 10 == 0:

@@ -9,7 +9,7 @@ Conv layers run through ``repro.kernels.lowering_conv.ops`` when
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

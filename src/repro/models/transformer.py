@@ -20,7 +20,6 @@ API:
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
@@ -526,6 +525,31 @@ def decode_step(params, cache, tokens, pos, cfg: ArchConfig,
     x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
     logits = L.unembed(params["embed"], x, cfg)
     return logits, new_cache
+
+
+def prefill(params, cache, tokens, cfg: ArchConfig,
+            window: Optional[int] = None):
+    """Batched prompt prefill: fill the KV/state cache for a whole (B, P)
+    prompt in ONE jitted call and return the logits at the last prompt
+    position (the first generation step's input).
+
+    Internally a ``lax.scan`` of ``decode_step`` over prompt positions —
+    cache-consistent for every arch family (ring buffers, SSM/RG-LRU
+    states, cross-attention) with none of the per-token Python dispatch
+    the old decode-the-prompt loop paid. Returns (logits (B,1,V), cache).
+    """
+    P = tokens.shape[1]
+    if P == 1:
+        return decode_step(params, cache, tokens, jnp.int32(0), cfg, window)
+
+    def body(c, t):
+        tok = jax.lax.dynamic_slice_in_dim(tokens, t, 1, axis=1)
+        _, c = decode_step(params, c, tok, t, cfg, window)
+        return c, None
+
+    cache, _ = jax.lax.scan(body, cache, jnp.arange(P - 1, dtype=jnp.int32))
+    return decode_step(params, cache, tokens[:, P - 1:P],
+                       jnp.int32(P - 1), cfg, window)
 
 
 # ---------------------------------------------------------------------------

@@ -11,7 +11,7 @@ axis without per-arch tables.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import numpy as np

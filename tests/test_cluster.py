@@ -1,0 +1,307 @@
+"""Heterogeneous cluster subsystem: black-box profiles, allocator
+invariants, sim-reduces-to-queue_sim, planner model vs simulation, and the
+share-weighted grouped step."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import cluster
+from repro.core import queue_sim
+from repro.core.async_sgd import make_grouped_train_step
+from repro.core.auto_optimizer import algorithm1
+from repro.core.compute_groups import group_batch_split
+from repro.core.workload import mlp_classify
+
+MIXED = "8xgpu-g2.2xlarge,8xcpu-c4.4xlarge"
+COST = cluster.WorkloadCost(flops_per_example=2e9, bytes_per_example=2e8,
+                            grad_bytes=4e6)
+
+
+# ---------------------------------------------------------------------------
+# devices
+# ---------------------------------------------------------------------------
+
+def test_parse_cluster_spec():
+    devs = cluster.parse_cluster_spec(MIXED)
+    assert len(devs) == 16
+    assert sum(d.kind == "gpu" for d in devs) == 8
+    assert sum(d.kind == "cpu" for d in devs) == 8
+    assert cluster.parse_cluster_spec("tpu-v5e")[0].kind == "tpu"
+    with pytest.raises(KeyError):
+        cluster.parse_cluster_spec("4xno-such-device")
+    with pytest.raises(ValueError):
+        cluster.parse_cluster_spec("")
+
+
+def test_measured_throughput_overrides_roofline():
+    spec = cluster.get_device("cpu-c4.4xlarge")
+    roofline = spec.predict_throughput(COST)
+    measured = dataclasses.replace(spec, throughput=123.0)
+    assert measured.predict_throughput(COST) == 123.0
+    assert roofline != 123.0
+    with pytest.raises(ValueError):  # no measurement and no cost
+        spec.predict_throughput(None)
+
+
+def test_profile_device_times_jitted_step():
+    """The black-box probe: times an actual jitted step, returns examples/s."""
+    wl = mlp_classify()
+    params = wl.init(jax.random.PRNGKey(0))
+    batch = jax.tree.map(lambda x: x[0],
+                         wl.sample_batches(jax.random.PRNGKey(1), 1, 32))
+    vg = jax.jit(jax.value_and_grad(wl.loss_fn))
+    thr = cluster.profile_device(vg, (params, batch), batch_size=32,
+                                 warmup=1, iters=3)
+    assert thr > 0
+    spec = cluster.profiled_spec(
+        cluster.DeviceSpec("probe", "cpu", 1e12, 1e11, 1e9),
+        vg, (params, batch), batch_size=32, warmup=1, iters=3)
+    assert spec.throughput > 0
+    assert spec.predict_throughput() == spec.throughput
+
+
+# ---------------------------------------------------------------------------
+# allocator
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("g", [1, 2, 3, 5, 8, 16])
+def test_allocator_invariants(g):
+    """No empty groups; every device used once; shares sum to the global
+    batch with >= 1 per group."""
+    devs = cluster.parse_cluster_spec(MIXED)
+    alloc = cluster.allocate(devs, g, 64, cost=COST)
+    assert alloc.num_groups == g
+    assert all(len(gr) >= 1 for gr in alloc.groups)
+    assert sorted(i for gr in alloc.groups for i in gr) == list(range(16))
+    assert sum(alloc.microbatches) == 64
+    assert all(b >= 1 for b in alloc.microbatches)
+    assert abs(sum(alloc.weights) - 1.0) < 1e-12
+
+
+def test_allocator_shares_follow_throughput():
+    """A strictly faster group must not get a smaller batch share."""
+    devs = cluster.parse_cluster_spec("4xgpu-titan-x,4xcpu-c4.4xlarge")
+    alloc = cluster.allocate(devs, 2, 32, cost=COST)
+    pairs = sorted(zip(alloc.throughputs, alloc.microbatches))
+    assert pairs[0][1] <= pairs[1][1]
+    with pytest.raises(ValueError):   # batch too small for g groups
+        cluster.allocate(devs, 8, 4, cost=COST)
+    with pytest.raises(ValueError):   # more groups than devices
+        cluster.allocate(devs, 9, 64, cost=COST)
+
+
+def test_rebalance_shifts_share_to_fast_group():
+    devs = cluster.parse_cluster_spec("2xgpu-g2.2xlarge,2xcpu-c4.4xlarge")
+    alloc = cluster.allocate(devs, 2, 32, cost=COST)
+    # pretend group 0 was observed 3x slower than predicted
+    times = [3.0 * alloc.microbatches[0] / alloc.throughputs[0],
+             1.0 * alloc.microbatches[1] / alloc.throughputs[1]]
+    re = cluster.rebalance(alloc, times)
+    assert re.microbatches[0] < alloc.microbatches[0]
+    assert re.microbatches[1] > alloc.microbatches[1]
+    assert sum(re.microbatches) == 32
+    # predicted per-group times equalize at the rebalanced shares
+    t0 = re.microbatches[0] / re.throughputs[0]
+    t1 = re.microbatches[1] / re.throughputs[1]
+    assert abs(t0 - t1) / max(t0, t1) < 0.25   # integer shares: near-equal
+
+
+# ---------------------------------------------------------------------------
+# sim
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("exponential", [True, False])
+@pytest.mark.parametrize("g", [1, 2, 4, 8])
+def test_sim_reduces_to_queue_sim(g, exponential):
+    """Identical groups (same seed) => bit-identical to the homogeneous
+    simulator."""
+    hom = queue_sim.simulate(g=g, t_conv=0.7, t_fc=0.05, iters=1500,
+                             exponential=exponential, seed=g)
+    het = cluster.simulate_hetero(t_conv=[0.7] * g, t_fc=0.05, iters=1500,
+                                  exponential=exponential, seed=g)
+    assert het.time_per_iteration == hom.time_per_iteration
+    assert het.mean_staleness == hom.mean_staleness
+    assert np.array_equal(het.staleness_hist, hom.staleness_hist)
+
+
+def test_sim_straggler_slows_iteration():
+    base = cluster.simulate_hetero(t_conv=[0.5] * 4, t_fc=0.05, iters=2000,
+                                   exponential=False)
+    slow = cluster.simulate_hetero(t_conv=[0.5] * 4, t_fc=0.05, iters=2000,
+                                   exponential=False,
+                                   slowdown=[1.0, 1.0, 1.0, 4.0])
+    assert slow.time_per_iteration > base.time_per_iteration
+    # asynchrony contains the damage: far better than a 4x-sync slowdown
+    assert slow.time_per_iteration < 4.0 * base.time_per_iteration
+
+
+# ---------------------------------------------------------------------------
+# planner
+# ---------------------------------------------------------------------------
+
+def test_hetero_he_reduces_to_homogeneous_model():
+    """Equal group times: max(t_fc, 1/sum(1/(t+t_fc))) == the paper's
+    max(t_fc, (t_conv + t_fc)/g)."""
+    t_conv, t_fc = 0.8, 0.05
+    for g in (1, 2, 4, 8):
+        het = cluster.hetero_time_per_iteration([t_conv] * g, t_fc)
+        hom = max(t_fc, (t_conv + t_fc) / g)
+        assert het == pytest.approx(hom, rel=1e-12)
+
+
+def test_planner_matches_hetero_sim_within_15pct():
+    """Acceptance: mixed 8xGPU+8xCPU plan's analytic time/iteration within
+    15% of the discrete-event simulation."""
+    devs = cluster.parse_cluster_spec(MIXED)
+    plan = cluster.best_allocation(devs, global_batch=64, t_fc=0.002,
+                                   cost=COST, mu_star_total=0.9)
+    sim = cluster.simulate_hetero(t_conv=plan.group_times, t_fc=0.002,
+                                  iters=4000, exponential=False)
+    err = abs(sim.time_per_iteration - plan.t_iteration) / plan.t_iteration
+    assert err < 0.15, (plan.t_iteration, sim.time_per_iteration)
+
+
+def test_planner_picks_sync_when_se_dominates():
+    """mu* = 0 and a sharp SE curve: any staleness costs more iterations
+    than the HE speedup buys, so g = 1 wins even with negligible t_fc."""
+    devs = cluster.parse_cluster_spec("8xgpu-g2.2xlarge")
+    plan = cluster.best_allocation(devs, global_batch=64, t_fc=1e-6,
+                                   cost=COST, mu_star_total=0.0,
+                                   se_sharpness=16.0)
+    assert plan.g == 1
+
+
+def test_planner_picks_async_when_fc_saturates():
+    """A large serial FC phase throttles sync; with a tolerant mu* the
+    planner must pick g > 1 (asynchrony hides t_fc)."""
+    devs = cluster.parse_cluster_spec("8xgpu-g2.2xlarge")
+    t_sync = cluster.plan_for_g(devs, 1, global_batch=64, t_fc=0.05,
+                                cost=COST).t_iteration
+    plan = cluster.best_allocation(devs, global_batch=64, t_fc=0.05,
+                                   cost=COST, mu_star_total=0.9)
+    assert plan.g > 1
+    assert plan.t_iteration < t_sync
+
+
+def test_algorithm1_accepts_planner_plan():
+    """Initial g comes from the plan (not smallest_saturating_g / N)."""
+    devs = cluster.parse_cluster_spec(MIXED)
+    plan = cluster.best_allocation(devs, global_batch=64, t_fc=0.002,
+                                   cost=COST, mu_star_total=0.9)
+    seen = []
+
+    def runner(state, *, g, mu, eta, steps, probe):
+        seen.append(g)
+        # converging losses, better with higher momentum: no g-halving
+        losses = np.linspace(1.0, 0.1 - 0.05 * mu, steps)
+        return state, losses
+
+    res = algorithm1(runner, None, n_devices=16, epochs=1, epoch_steps=10,
+                     probe_steps=5, plan=plan)
+    # after the cold-start (g=1) probes, the first searched g is plan.g
+    first_searched = next(g for g in seen if g != 1)
+    assert first_searched == plan.g
+    assert res.g == plan.g
+
+    bad = dataclasses.replace(plan, g=64)
+    with pytest.raises(ValueError):
+        algorithm1(runner, None, n_devices=16, epochs=1, epoch_steps=10,
+                   probe_steps=5, plan=bad)
+
+
+# ---------------------------------------------------------------------------
+# weighted grouped step + sized batch split
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", ["fused", "scan"])
+@pytest.mark.parametrize("g", [1, 2, 4])
+def test_weighted_step_equal_shares_match_exactly(g, strategy):
+    """Acceptance: uniform group_weights == the equal-share path, exactly
+    (bitwise), for both update strategies."""
+    wl = mlp_classify()
+    params = wl.init(jax.random.PRNGKey(0))
+    mom = jax.tree.map(jnp.zeros_like, params)
+    batches = wl.sample_batches(jax.random.PRNGKey(1), 3, 32)
+    base = make_grouped_train_step(wl.loss_fn, num_groups=g, lr=0.05,
+                                   momentum=0.9, strategy=strategy)
+    weighted = make_grouped_train_step(wl.loss_fn, num_groups=g, lr=0.05,
+                                       momentum=0.9, strategy=strategy,
+                                       group_weights=(1.0 / g,) * g)
+    p1 = p2 = params
+    m1 = m2 = mom
+    for t in range(3):
+        gb = group_batch_split(jax.tree.map(lambda x: x[t], batches), g)
+        p1, m1, l1 = base(p1, m1, gb)
+        p2, m2, l2 = weighted(p2, m2, gb)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(m1), jax.tree.leaves(m2)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("strategy", ["fused", "scan"])
+def test_weighted_step_unequal_shares_semantics(strategy):
+    """g=2, mu=0, shares (3/4, 1/4): backbone applies -lr*2*w_i per
+    sub-step, merged-FC head one -lr*sum(w_i g_i) update."""
+    def loss_fn(p, batch):
+        return jnp.sum(p["conv"] * batch["x"]) + jnp.sum(p["fc"] * batch["x"])
+
+    def head_filter(path):
+        return any(getattr(k, "key", None) == "fc" for k in path)
+
+    lr = 0.1
+    params = {"conv": jnp.float32(0.0), "fc": jnp.float32(0.0)}
+    mom = jax.tree.map(jnp.zeros_like, params)
+    batches = {"x": jnp.array([1.0, 3.0])}        # per-group grads 1, 3
+    step = make_grouped_train_step(loss_fn, num_groups=2, lr=lr, momentum=0.0,
+                                   head_filter=head_filter, strategy=strategy,
+                                   group_weights=(0.75, 0.25))
+    p, m, loss = step(params, mom, batches)
+    np.testing.assert_allclose(float(p["conv"]),
+                               -lr * (2 * 0.75 * 1 + 2 * 0.25 * 3), rtol=1e-6)
+    np.testing.assert_allclose(float(p["fc"]),
+                               -lr * (0.75 * 1 + 0.25 * 3), rtol=1e-6)
+
+
+def test_group_batch_split_sizes():
+    b = {"x": jnp.arange(8.0)}
+    out = group_batch_split(b, 2, sizes=(5, 3))
+    assert out["x"].shape == (2, 5)
+    np.testing.assert_array_equal(np.asarray(out["x"][0]), [0, 1, 2, 3, 4])
+    # short group wrap-fills from its own slice only
+    np.testing.assert_array_equal(np.asarray(out["x"][1]), [5, 6, 7, 5, 6])
+    # equal sizes == the plain reshape
+    eq = group_batch_split(b, 2, sizes=(4, 4))
+    np.testing.assert_array_equal(np.asarray(eq["x"]),
+                                  np.arange(8.0).reshape(2, 4))
+    with pytest.raises(ValueError):
+        group_batch_split(b, 2, sizes=(5, 4))       # sum != B
+    with pytest.raises(ValueError):
+        group_batch_split(b, 2, sizes=(8, 0))       # empty group
+    with pytest.raises(ValueError):
+        group_batch_split(b, 3, sizes=(4, 4))       # len != g
+
+
+def test_planned_weighted_training_descends():
+    """End-to-end: plan a mixed cluster, train the MLP at the planned
+    allocation (sized split + weighted updates); loss must descend."""
+    devs = cluster.parse_cluster_spec("4xgpu-g2.2xlarge,4xcpu-c4.4xlarge")
+    wl = mlp_classify()
+    plan = cluster.best_allocation(devs, global_batch=wl.batch_size,
+                                   t_fc=0.001, cost=COST, mu_star_total=0.9)
+    params = wl.init(jax.random.PRNGKey(0))
+    mom = jax.tree.map(jnp.zeros_like, params)
+    step = jax.jit(make_grouped_train_step(
+        wl.loss_fn, num_groups=plan.g, lr=0.05, momentum=0.3,
+        group_weights=plan.weights))
+    batches = wl.sample_batches(jax.random.PRNGKey(1), 40, wl.batch_size)
+    losses = []
+    for t in range(40):
+        gb = group_batch_split(jax.tree.map(lambda x: x[t], batches), plan.g,
+                               sizes=plan.allocation.microbatches)
+        params, mom, loss = step(params, mom, gb)
+        losses.append(float(loss))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5])

@@ -10,7 +10,6 @@ from repro.core import queue_sim
 from repro.core.async_sgd import delayed_sgd_run, make_grouped_train_step
 from repro.core.compute_groups import GroupSpec, group_batch_split
 from repro.core.implicit_momentum import (implicit_momentum,
-                                          measure_momentum_from_updates,
                                           optimal_explicit_momentum)
 from repro.core.workload import mlp_classify, quadratic
 

@@ -13,7 +13,8 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import sys
 sys.path.insert(0, "src")
-import jax, jax.numpy as jnp
+import jax
+import jax.numpy as jnp
 from repro.configs import get_smoke_config
 from repro.configs.base import InputShape, TrainConfig
 from repro.launch import steps as ST

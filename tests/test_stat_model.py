@@ -1,0 +1,72 @@
+"""stat_model penalty bookkeeping: explicit inf/None semantics for
+degenerate SE data (the old truthiness test silently collapsed se_iters=0
+to "unknown" and a zero baseline to a division error)."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.stat_model import (TradeoffPoint, iterations_to_loss,
+                                   penalties, penalty_ratio,
+                                   predict_se_penalty)
+
+
+def _pt(g, he, se):
+    return TradeoffPoint(g=g, mu=0.9, eta=0.1, he_time=he, se_iters=se)
+
+
+def test_penalty_ratio_semantics():
+    assert penalty_ratio(None, 10) is None          # unknown point
+    assert penalty_ratio(10, None) is None          # unknown baseline
+    assert penalty_ratio(10, 0) == math.inf         # baseline instant
+    assert penalty_ratio(0, 0) == 1.0               # both instant
+    assert penalty_ratio(0, 10) == 0.0              # point instant
+    assert penalty_ratio(30, 10) == 3.0
+
+
+def test_penalties_zero_se_baseline_gives_inf_not_crash():
+    pts = {1: _pt(1, 1.0, 0), 4: _pt(4, 0.5, 20)}
+    out = penalties(pts)
+    assert out[4]["P_SE"] == math.inf
+    assert out[4]["P_total"] == math.inf
+    assert out[1]["P_SE"] == 1.0                    # 0/0: equally instant
+    assert out[1]["P_HE"] == 1.0
+
+
+def test_penalties_zero_se_point_is_zero_not_none():
+    pts = {1: _pt(1, 1.0, 100), 2: _pt(2, 0.6, 0)}
+    out = penalties(pts)
+    assert out[2]["P_SE"] == 0.0
+    assert out[2]["P_total"] == 0.0
+
+
+def test_penalties_missing_se_is_none():
+    pts = {1: _pt(1, 1.0, 100), 8: _pt(8, 0.2, None)}
+    out = penalties(pts)
+    assert out[8]["P_SE"] is None
+    assert out[8]["P_total"] is None
+    assert out[8]["P_HE"] == pytest.approx(0.2)
+
+
+def test_penalties_requires_sync_baseline():
+    with pytest.raises(ValueError):
+        penalties({2: _pt(2, 0.5, 10)})
+
+
+def test_total_time_and_iterations_to_loss():
+    assert _pt(1, 0.5, 40).total_time == 20.0
+    assert _pt(1, 0.5, None).total_time is None
+    assert _pt(1, 0.5, 0).total_time == 0.0         # instant, not unknown
+    losses = np.concatenate([np.linspace(2.0, 0.4, 50), np.full(10, 0.4)])
+    it = iterations_to_loss(losses, 0.5)
+    assert it is not None and 0 < it < 60
+    assert iterations_to_loss([], 0.5) is None
+    assert iterations_to_loss([2.0, 1.9], 0.5) is None
+
+
+def test_predict_se_penalty_shape():
+    assert predict_se_penalty(1, 0.9) == 1.0
+    assert predict_se_penalty(4, 0.9) == 1.0        # implicit 0.75 < 0.9
+    assert predict_se_penalty(32, 0.9) > 1.0        # implicit past optimum
+    assert (predict_se_penalty(64, 0.9, sharpness=8.0)
+            > predict_se_penalty(64, 0.9, sharpness=2.0))
