@@ -1,5 +1,10 @@
 """Attribute trip-weighted collective bytes of a (arch, shape) lowering to
-JAX op names — the hillclimb profiling tool (dry-run profile, no hardware)."""
+JAX op names — the hillclimb profiling tool (dry-run profile, no hardware).
+
+``--replay-compare`` instead runs the predicted-vs-replayed validation
+table: for each g, the analytic staleness / implicit-momentum / SE-penalty
+predictions next to what actually falls out of *executing* SGD along the
+simulator's event trace (repro.exec)."""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 import sys
@@ -99,11 +104,82 @@ def attribute(txt, top=12):
     for (op, shp, name), b in agg.most_common(top):
         print(f"{b/2**30:9.1f} GiB  {op:18s} [{shp}] ...{name}")
 
+def replay_compare(gs=(1, 2, 4, 8), steps=400, momentum_runs=800, seed=0):
+    """Predicted vs replayed staleness / implicit momentum / SE per g.
+
+    Columns: analytic round-robin staleness (g-1) vs the exponential-
+    service simulator's trace mean; Theorem 1's 1-1/g vs the momentum
+    fitted from replayed trajectories; analytic P_SE vs the penalty
+    measured by replaying an MLP workload along each g's trace
+    (stat_model.measured_se_from_replay).
+    """
+    import numpy as np
+    from repro.core import queue_sim
+    from repro.core.implicit_momentum import (implicit_momentum,
+                                              measure_effective_momentum)
+    from repro.core.stat_model import (measured_se_from_replay,
+                                       predict_se_penalty)
+    from repro.core.workload import mlp_classify
+    from repro.exec import replay_trace_scan, replayed_momentum_experiment
+
+    gs = tuple(sorted(set(gs) | {1}))   # P_SE normalizes to the sync run
+    wl = mlp_classify()
+    params = wl.init(jax.random.PRNGKey(seed))
+    batches = wl.sample_batches(jax.random.PRNGKey(seed + 1), steps,
+                                wl.batch_size)
+    curves, sim_staleness = {}, {}
+    for g in gs:
+        _, trace = queue_sim.simulate(g=g, t_conv=1.0, t_fc=1e-2,
+                                      iters=steps, exponential=True,
+                                      seed=seed, return_trace=True)
+        # drop warmup like SimResult.mean_staleness does
+        sim_staleness[g] = float(trace.staleness[len(trace) // 10:].mean())
+        _, losses, _ = replay_trace_scan(wl.loss_fn, params, batches, trace,
+                                         lr=0.05, momentum=0.0)
+        curves[g] = np.asarray(losses)
+    # target: the loss the sync run reaches at 60% of the budget
+    k = max(1, int(0.6 * steps))
+    target = float(np.convolve(curves[min(gs)], np.ones(5) / 5,
+                               mode="valid")[:k].min())
+    se = measured_se_from_replay(curves, target)
+    print("g  S_pred S_sim   mu_pred mu_replay   P_SE_pred P_SE_replay"
+          "  se_iters")
+    for g in gs:
+        if g == 1:
+            mu_meas = 0.0
+        else:
+            traj = replayed_momentum_experiment(
+                g, eta=0.2, steps=300, runs=momentum_runs, seed=seed)
+            w = traj[3:]
+            keep = np.nonzero(np.abs(w) >= 1e-3)[0]
+            if keep.size:
+                w = w[:keep[-1] + 1]
+            mu_meas = measure_effective_momentum(w[:, None], w[:, None],
+                                                 lr=0.2, fit_lr=True)
+        row = se[g]
+        pse = row["P_SE"]
+        print(f"{g:<3d}{g - 1:6d} {sim_staleness[g]:6.2f}  "
+              f"{implicit_momentum(g):7.3f} {mu_meas:9.3f}  "
+              f"{predict_se_penalty(g, 0.9):9.2f} "
+              f"{pse if pse is None else f'{pse:11.2f}'}  "
+              f"{row['se_iters']}")
+    return se
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
-    ap.add_argument("arch")
-    ap.add_argument("shape")
+    ap.add_argument("arch", nargs="?")
+    ap.add_argument("shape", nargs="?")
     ap.add_argument("--accum", type=int)
+    ap.add_argument("--replay-compare", action="store_true",
+                    help="predicted-vs-replayed staleness/SE table "
+                         "instead of HLO attribution")
+    ap.add_argument("--gs", type=str, default="1,2,4,8")
     args = ap.parse_args()
-    c = compile_pair(args.arch, args.shape, args.accum)
-    attribute(c.as_text())
+    if args.replay_compare:
+        replay_compare(gs=tuple(int(x) for x in args.gs.split(",")))
+    else:
+        if not (args.arch and args.shape):
+            ap.error("arch and shape are required without --replay-compare")
+        c = compile_pair(args.arch, args.shape, args.accum)
+        attribute(c.as_text())

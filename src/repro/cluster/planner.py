@@ -30,7 +30,7 @@ composes it with the statistical model:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Tuple
+from typing import Mapping, Optional, Sequence, Tuple
 
 from repro.cluster.allocator import Allocation, allocate
 from repro.cluster.devices import DeviceSpec, WorkloadCost
@@ -101,13 +101,22 @@ def hetero_time_per_iteration(group_times: Sequence[float],
 
 def plan_for_g(devices: Sequence[DeviceSpec], g: int, *, global_batch: int,
                t_fc: float, cost: Optional[WorkloadCost] = None,
-               mu_star_total: float = 0.9,
-               se_sharpness: float = 4.0) -> Plan:
-    """Score one candidate g: allocate, predict HE, multiply by P_SE."""
+               mu_star_total: float = 0.9, se_sharpness: float = 4.0,
+               se_penalties: Optional[Mapping[int, float]] = None) -> Plan:
+    """Score one candidate g: allocate, predict HE, multiply by P_SE.
+
+    ``se_penalties`` overrides the analytic SE model with *measured*
+    penalties (``stat_model.measured_se_from_replay`` over replayed
+    traces) for the g values it contains; others fall back to
+    ``predict_se_penalty``.
+    """
     alloc = allocate(devices, g, global_batch, cost=cost)
     times = group_conv_times(alloc, cost)
     t_iter = hetero_time_per_iteration(times, t_fc)
-    pse = predict_se_penalty(g, mu_star_total, sharpness=se_sharpness)
+    if se_penalties is not None and g in se_penalties:
+        pse = float(se_penalties[g])
+    else:
+        pse = predict_se_penalty(g, mu_star_total, sharpness=se_sharpness)
     return Plan(g=g, allocation=alloc, group_times=times, t_iteration=t_iter,
                 se_penalty=pse, time_score=t_iter * pse)
 
@@ -115,12 +124,18 @@ def plan_for_g(devices: Sequence[DeviceSpec], g: int, *, global_batch: int,
 def best_allocation(devices: Sequence[DeviceSpec], *, global_batch: int,
                     t_fc: float, cost: Optional[WorkloadCost] = None,
                     mu_star_total: float = 0.9, se_sharpness: float = 4.0,
-                    g_candidates: Optional[Sequence[int]] = None) -> Plan:
+                    g_candidates: Optional[Sequence[int]] = None,
+                    se_penalties: Optional[Mapping[int, float]] = None
+                    ) -> Plan:
     """Search (g, alloc) for the minimum predicted time-to-convergence.
 
     Default candidate set is every feasible g (1..min(N, global_batch) —
     each group needs a device and at least one example). Returns the best
     ``Plan``; ties break toward smaller g (less staleness for free).
+
+    ``se_penalties`` (measured P_SE per g, from
+    ``stat_model.measured_se_from_replay``) replaces the analytic SE
+    penalty for the g values it covers — replay-calibrated planning.
     """
     n = len(devices)
     if g_candidates is None:
@@ -132,7 +147,8 @@ def best_allocation(devices: Sequence[DeviceSpec], *, global_batch: int,
                              f"batch={global_batch}")
         plan = plan_for_g(devices, g, global_batch=global_batch, t_fc=t_fc,
                           cost=cost, mu_star_total=mu_star_total,
-                          se_sharpness=se_sharpness)
+                          se_sharpness=se_sharpness,
+                          se_penalties=se_penalties)
         if best is None or plan.time_score < best.time_score:
             best = plan
     return best

@@ -25,13 +25,18 @@ from repro.core.queue_sim import SimResult
 def simulate_hetero(*, t_conv: Sequence[float], t_fc: float,
                     iters: int = 2000, exponential: bool = True,
                     seed: int = 0, cv: Optional[float] = None,
-                    slowdown: Optional[Sequence[float]] = None) -> SimResult:
+                    slowdown: Optional[Sequence[float]] = None,
+                    return_trace: bool = False):
     """Event loop with per-group conv means ``t_conv`` (length g).
 
     ``slowdown``, when given, multiplies each group's mean — a straggler
     model (e.g. ``[1, 1, 3, 1]`` makes group 2 a 3x straggler). Staleness
     of an update is the number of model updates between the group's read
     and its write, exactly as in the homogeneous simulator.
+
+    ``return_trace=True`` additionally returns the per-commit
+    ``repro.exec.trace.EventTrace`` for the replay engine; recording does
+    not consume RNG, so the ``SimResult`` is bit-identical either way.
     """
     t_conv = [float(t) for t in t_conv]
     g = len(t_conv)
@@ -54,6 +59,7 @@ def simulate_hetero(*, t_conv: Sequence[float], t_fc: float,
     version = 0
     read_version = {i: 0 for i in range(g)}
     staleness = []
+    commits = []  # (group, read_version, time) per fc_done
     fc_busy_until = 0.0
     done_time = None
     events = []  # (time, seq, kind, group)
@@ -73,6 +79,7 @@ def simulate_hetero(*, t_conv: Sequence[float], t_fc: float,
             seq += 1
         else:  # fc_done: model update commits
             staleness.append(version - read_version[grp])
+            commits.append((grp, read_version[grp], t))
             version += 1
             completed += 1
             done_time = t
@@ -81,7 +88,13 @@ def simulate_hetero(*, t_conv: Sequence[float], t_fc: float,
             seq += 1
 
     st = np.asarray(staleness[iters // 10:])  # drop warmup
-    return SimResult(time_per_iteration=done_time / completed,
-                     iterations=completed,
-                     mean_staleness=float(st.mean()),
-                     staleness_hist=np.bincount(st, minlength=2 * g))
+    result = SimResult(time_per_iteration=done_time / completed,
+                       iterations=completed,
+                       mean_staleness=float(st.mean()),
+                       staleness_hist=np.bincount(st, minlength=2 * g))
+    if not return_trace:
+        return result
+    from repro.exec.trace import EventTrace  # local: avoids import cycles
+    grp_a, rv_a, t_a = (np.asarray(c) for c in zip(*commits))
+    return result, EventTrace(num_groups=g, group=grp_a, read_version=rv_a,
+                              commit_time=t_a)

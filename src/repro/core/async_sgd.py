@@ -22,6 +22,12 @@ Two implementations of the paper's execution strategy:
    literal O(g) sequential application as the semantic reference.
 
 Both reduce exactly to synchronous data-parallel SGD at g=1.
+
+``repro.exec.replay`` generalizes (1) from one fixed staleness S to
+per-commit staleness along an arbitrary recorded ``EventTrace`` (ring-
+buffered parameter history); the deterministic round-robin traces reduce
+it back to these two implementations — the conformance contract pinned by
+``tests/test_exec_replay.py``.
 """
 from __future__ import annotations
 

@@ -49,10 +49,18 @@ def group_batch_split(batch, g: int, sizes: Optional[Sequence[int]] = None):
     Unequal shares (``sizes`` from a heterogeneous allocation,
     ``cluster.allocator.Allocation.microbatches``): each group gets its own
     contiguous slice, wrap-filled (examples cycled) to ``max(sizes)`` so all
-    microbatches share a shape for the SPMD vmap. Wrapping repeats a
-    group's earliest examples, biasing that group's *internal* mean by
-    O(1/b) — the cross-group weighting must come from
-    ``make_grouped_train_step(group_weights=...)``, not from here.
+    microbatches share a shape for the SPMD vmap.
+
+    Wrap-fill bias bound: a group of size ``s`` cycled to ``b = max(sizes)``
+    repeats its first ``r = b mod s`` examples once more than the rest, so
+    its microbatch mean differs from the true slice mean by exactly
+
+        (r (s - r) / (s b)) * (mean of first r - mean of remaining s - r)
+
+    whose magnitude is at most ``(s / (4 b)) * (max - min)`` over the
+    slice — an O(1/b) bias (zero when ``s`` divides ``b``). Cross-group
+    weighting must come from ``make_grouped_train_step(group_weights=...)``,
+    not from here.
     """
     if sizes is not None:
         sizes = tuple(int(s) for s in sizes)

@@ -33,15 +33,27 @@ def optimal_explicit_momentum(g: int, mu_star_total: float) -> float:
 
 def measure_effective_momentum(param_trace: np.ndarray,
                                grads_at_trace: np.ndarray,
-                               lr: float) -> float:
+                               lr: float, *, fit_lr: bool = False) -> float:
     """Fit mu in  dW_{t+1} = mu dW_t - eta_eff * grad_t  by least squares
     over a flattened parameter trace (T, D). Returns the fitted momentum
-    modulus. ``grads_at_trace``: gradients evaluated at W_t (T, D)."""
+    modulus. ``grads_at_trace``: gradients evaluated at W_t (T, D).
+
+    ``fit_lr=False`` assumes ``eta_eff == lr`` (one-parameter fit — right
+    when the trace comes from explicit-momentum SGD at a known step size).
+    ``fit_lr=True`` fits (mu, eta_eff) jointly and ignores ``lr`` — the
+    estimator for *replayed* asynchronous traces, where Theorem 1 predicts
+    eta_eff = lr/g alongside mu = 1 - 1/g (the paper's Fig. 6 measured
+    momentum; trajectories from ``exec.replayed_momentum_experiment``)."""
     w = np.asarray(param_trace, dtype=np.float64)
     g = np.asarray(grads_at_trace, dtype=np.float64)
     dw = np.diff(w, axis=0)                        # (T-1, D)
     if dw.shape[0] < 3:
         raise ValueError("trace too short")
+    if fit_lr:
+        y = dw[1:].ravel()
+        X = np.stack([dw[:-1].ravel(), g[1:-1].ravel()], axis=1)
+        coef, *_ = np.linalg.lstsq(X, y, rcond=None)
+        return float(coef[0])
     y = (dw[1:] + lr * g[1:-1]).ravel()            # target: mu * dW_t (+ lr-scale slack)
     x = dw[:-1].ravel()
     denom = float(x @ x)

@@ -25,11 +25,17 @@ class SimResult:
 
 def simulate(*, g: int, t_conv: float, t_fc: float, iters: int = 2000,
              exponential: bool = True, seed: int = 0,
-             cv: Optional[float] = None) -> SimResult:
+             cv: Optional[float] = None, return_trace: bool = False):
     """Event loop: each group cycles (conv compute -> FC service -> update).
     The FC server is serial; groups queue for it. The model version counter
     increments on every FC completion (update); staleness of an update is
     (#updates between the group's model read and its write) (paper §IV-A).
+
+    ``return_trace=True`` additionally returns the per-commit
+    ``repro.exec.trace.EventTrace`` (commit group / read version / time),
+    which ``repro.exec.replay`` can execute real SGD along. Recording does
+    not touch the RNG stream, so the ``SimResult`` is bit-identical either
+    way.
     """
     rng = np.random.default_rng(seed)
 
@@ -44,6 +50,7 @@ def simulate(*, g: int, t_conv: float, t_fc: float, iters: int = 2000,
     version = 0
     read_version = {i: 0 for i in range(g)}
     staleness = []
+    commits = []  # (group, read_version, time) per fc_done
     fc_busy_until = 0.0
     done_time = None
     events = []  # (time, seq, kind, group)
@@ -63,6 +70,7 @@ def simulate(*, g: int, t_conv: float, t_fc: float, iters: int = 2000,
             seq += 1
         else:  # fc_done: model update commits
             staleness.append(version - read_version[grp])
+            commits.append((grp, read_version[grp], t))
             version += 1
             completed += 1
             done_time = t
@@ -71,7 +79,13 @@ def simulate(*, g: int, t_conv: float, t_fc: float, iters: int = 2000,
             seq += 1
 
     st = np.asarray(staleness[iters // 10:])  # drop warmup
-    return SimResult(time_per_iteration=done_time / completed,
-                     iterations=completed,
-                     mean_staleness=float(st.mean()),
-                     staleness_hist=np.bincount(st, minlength=2 * g))
+    result = SimResult(time_per_iteration=done_time / completed,
+                       iterations=completed,
+                       mean_staleness=float(st.mean()),
+                       staleness_hist=np.bincount(st, minlength=2 * g))
+    if not return_trace:
+        return result
+    from repro.exec.trace import EventTrace  # local: core must import alone
+    grp_a, rv_a, t_a = (np.asarray(c) for c in zip(*commits))
+    return result, EventTrace(num_groups=g, group=grp_a, read_version=rv_a,
+                              commit_time=t_a)

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, Optional, Sequence
+from typing import Dict, Mapping, Optional, Sequence
 
 import numpy as np
 
@@ -82,6 +82,35 @@ def penalties(points: Dict[int, TradeoffPoint]):
             "mu": pt.mu, "eta": pt.eta,
         }
     return out
+
+
+def measured_se_from_replay(replay_losses: Mapping[int, Sequence[float]],
+                            target: float, *, smooth: int = 5
+                            ) -> Dict[int, Dict[str, Optional[float]]]:
+    """SE calibration from *executed* traces rather than the analytic
+    penalty: ``replay_losses`` maps g -> the loss curve of an
+    ``exec.replay`` run along a g-group event trace (e.g. from
+    ``queue_sim.simulate(..., return_trace=True)``).
+
+    Returns ``{g: {"se_iters", "P_SE"}}`` — iterations to ``target`` and
+    the penalty normalized to the g=1 entry (``penalty_ratio`` semantics:
+    ``None`` when either side never converged). The P_SE values plug
+    straight into the planner (``cluster.planner.best_allocation(
+    se_penalties=...)``), which is how Algorithm 1's initial-g choice can
+    be calibrated from executions.
+
+    Like ``penalties()``, requires the sync baseline — P_SE is
+    meaningless without a g=1 curve to normalize against.
+    """
+    iters = {int(g): iterations_to_loss(l, target, smooth=smooth)
+             for g, l in replay_losses.items()}
+    if 1 not in iters:
+        raise ValueError(
+            "measured_se_from_replay() needs the sync baseline "
+            "(a g=1 replayed loss curve)")
+    base = iters[1]
+    return {g: {"se_iters": n, "P_SE": penalty_ratio(n, base)}
+            for g, n in sorted(iters.items())}
 
 
 def predict_se_penalty(g: int, mu_star_total: float, sharpness: float = 4.0):

@@ -1,0 +1,11 @@
+"""Trace-driven asynchronous execution engine: ``EventTrace`` records from
+the discrete-event simulators, replayed as real SGD updates (Python
+reference, jittable scan, or closed-form fused runs)."""
+from repro.exec.replay import (replay_trace, replay_trace_fused,
+                               replay_trace_python, replay_trace_scan,
+                               replayed_momentum_experiment)
+from repro.exec.trace import EventTrace
+
+__all__ = ["EventTrace", "replay_trace", "replay_trace_fused",
+           "replay_trace_python", "replay_trace_scan",
+           "replayed_momentum_experiment"]

@@ -22,6 +22,7 @@ import argparse
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -32,6 +33,39 @@ from repro.core.compute_groups import GroupSpec, group_batch_split
 from repro.data.pipeline import DataConfig, SyntheticLM, prefetch
 from repro.models import transformer as T
 from repro.optim.sgd import init_momentum
+
+
+def _replay_main(args, cfg, params, loss_fn):
+    """--replay-trace: drive a smoke run along a recorded event trace —
+    the executed counterpart of the simulators' staleness predictions."""
+    from repro.exec import EventTrace, replay_trace
+
+    trace = EventTrace.load(args.replay_trace).truncate(args.steps)
+    T = len(trace)
+    if T == 0:
+        raise SystemExit(f"{args.replay_trace} has no commits to replay "
+                         f"(after truncation to --steps {args.steps})")
+    print(f"arch={cfg.name} replaying {args.replay_trace}: {T} commits, "
+          f"g={trace.num_groups}, mean staleness "
+          f"{float(trace.staleness.mean()):.2f}, max {trace.max_staleness}")
+    data = SyntheticLM(DataConfig(batch_size=args.batch, seq_len=args.seq,
+                                  vocab_size=cfg.vocab_size, seed=args.seed))
+    # one microbatch per commit, stacked to a (T, ...) leading axis
+    batches = jax.tree.map(lambda *xs: jnp.stack(xs),
+                           *list(data.batches(T)))
+    t0 = time.time()
+    _, losses, _ = replay_trace(
+        loss_fn, params, batches, trace, lr=args.lr,
+        momentum=args.momentum, weight_decay=args.weight_decay,
+        impl=args.replay_impl,
+        depth=args.replay_depth or None)
+    losses = np.asarray(losses)
+    dt = time.time() - t0
+    for i in range(0, T, 10):
+        print(f"commit {i:5d} loss {float(losses[i]):.4f}")
+    print(f"final loss {losses[-5:].mean():.4f} "
+          f"({dt / T * 1e3:.0f} ms/commit, impl={args.replay_impl})")
+    return losses.tolist()
 
 
 def main(argv=None):
@@ -53,6 +87,21 @@ def main(argv=None):
     ap.add_argument("--update-impl", choices=("xla", "pallas"), default="xla",
                     help="leaf kernel for the fused update (pallas runs "
                          "interpret-mode off-TPU)")
+    ap.add_argument("--replay-trace", type=str, default="",
+                    help="replay a recorded event trace (.npz saved from "
+                         "queue_sim/cluster-sim EventTrace): executes one "
+                         "per-commit stale update per trace commit instead "
+                         "of the round-robin grouped step (truncated to "
+                         "--steps commits)")
+    ap.add_argument("--replay-impl", choices=("scan", "python", "fused"),
+                    default="scan",
+                    help="replay engine: jittable lax.scan (default), the "
+                         "Python reference, or the closed-form fused path "
+                         "(run-structured traces only)")
+    ap.add_argument("--replay-depth", type=int, default=0,
+                    help="cap the replay parameter-history ring; commits "
+                         "staler than the ring read its oldest version "
+                         "(0 = full max-staleness depth)")
     ap.add_argument("--cluster-spec", type=str, default="",
                     help="heterogeneous cluster, e.g. "
                          "'8xgpu-g2.2xlarge,8xcpu-c4.4xlarge' "
@@ -79,6 +128,9 @@ def main(argv=None):
 
     def loss_fn(p, batch):
         return T.lm_loss(p, batch, cfg)
+
+    if args.replay_trace:
+        return _replay_main(args, cfg, params, loss_fn)
 
     groups, group_weights, micro_sizes = args.groups, None, None
     if args.plan:

@@ -1,0 +1,38 @@
+"""Regenerate the golden event-trace fixtures.
+
+    PYTHONPATH=src python tests/golden/make_golden.py
+
+The fixtures pin the event-loop semantics of ``queue_sim.simulate`` and
+``cluster.sim.simulate_hetero`` bit-exactly (commit order, read versions,
+float64 commit times): ``tests/test_exec_replay.py`` re-runs the
+simulators with the same arguments and requires ``array_equal`` against
+these files, so any drift in RNG consumption order or event handling
+fails loudly. Only regenerate after an INTENTIONAL semantic change, and
+say so in the commit message.
+"""
+import pathlib
+
+from repro.cluster.sim import simulate_hetero
+from repro.core.queue_sim import simulate
+
+HERE = pathlib.Path(__file__).resolve().parent
+
+QUEUE_ARGS = dict(g=4, t_conv=1.0, t_fc=0.1, iters=64, exponential=True,
+                  seed=7)
+HETERO_ARGS = dict(t_conv=[0.5, 1.0, 2.0], t_fc=0.1, iters=64,
+                   exponential=True, seed=3, slowdown=[1.0, 1.0, 1.5])
+
+
+def main():
+    _, tr = simulate(**QUEUE_ARGS, return_trace=True)
+    tr.save(HERE / "queue_sim_g4.npz")
+    print(f"queue_sim_g4.npz: {len(tr)} commits, "
+          f"mean staleness {tr.staleness.mean():.3f}")
+    _, tr = simulate_hetero(**HETERO_ARGS, return_trace=True)
+    tr.save(HERE / "hetero_g3.npz")
+    print(f"hetero_g3.npz: {len(tr)} commits, "
+          f"mean staleness {tr.staleness.mean():.3f}")
+
+
+if __name__ == "__main__":
+    main()

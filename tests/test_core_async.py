@@ -168,3 +168,36 @@ def test_queue_sim_staleness_mean():
         r = queue_sim.simulate(g=g, t_conv=1.0, t_fc=0.01, iters=3000,
                                exponential=True)
         assert abs(r.mean_staleness - (g - 1)) < 0.5, (g, r.mean_staleness)
+
+
+def test_group_batch_split_sizes_edge_cases():
+    """Issue cases: sizes not summing to B, a zero-size group, bad length."""
+    batch = {"x": jnp.arange(12.0)}
+    with pytest.raises(ValueError):          # distinct sizes, wrong total
+        group_batch_split(batch, 3, sizes=(6, 4, 4))
+    with pytest.raises(ValueError):          # equal sizes, wrong total
+        group_batch_split(batch, 3, sizes=(3, 3, 3))
+    with pytest.raises(ValueError):          # zero-size group
+        group_batch_split(batch, 3, sizes=(8, 4, 0))
+    with pytest.raises(ValueError):          # len(sizes) != g
+        group_batch_split(batch, 3, sizes=(8, 4))
+
+
+def test_group_batch_split_wrap_fill_bias_bound():
+    """The wrap-fill bias equals the closed form documented in the
+    docstring and respects the (s / 4b) * range bound."""
+    vals = np.array([3.0, -1.0, 7.0, 2.0, 4.0,     # group 0 (s=5)
+                     1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0])  # group 1
+    out = group_batch_split({"x": jnp.asarray(vals)}, 2, sizes=(5, 8))
+    assert out["x"].shape == (2, 8)
+    s, b = 5, 8
+    r = b % s
+    sl = vals[:s]
+    bias = float(out["x"][0].mean()) - sl.mean()
+    exact = (r * (s - r) / (s * b)) * (sl[:r].mean() - sl[r:].mean())
+    np.testing.assert_allclose(bias, exact, rtol=1e-6)
+    assert abs(bias) <= s / (4.0 * b) * (sl.max() - sl.min()) + 1e-9
+    # the unwrapped group is exact, and wrapping repeats earliest examples
+    np.testing.assert_allclose(np.asarray(out["x"][1]), vals[s:], rtol=0)
+    np.testing.assert_allclose(np.asarray(out["x"][0]),
+                               sl[np.arange(b) % s], rtol=0)

@@ -1,0 +1,322 @@
+"""Conformance + golden-trace tests for the trace-driven execution engine.
+
+Pins three contracts:
+- golden fixtures: the simulators' event-loop semantics are bit-exact
+  against ``tests/golden/*.npz`` (commit order, read versions, times);
+- conformance: replaying deterministic round-robin traces reproduces the
+  two existing reference implementations (``delayed_sgd_run`` and the
+  grouped ``strategy="scan"`` step) to fp32 tolerance, and the three
+  replay implementations agree with each other on stochastic traces;
+- Theorem 1, executed: replaying exponential-service traces with explicit
+  mu = 0 recovers implicit momentum 1 - 1/g (the paper's Fig. 6).
+"""
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cluster.sim import simulate_hetero
+from repro.core import queue_sim
+from repro.core.async_sgd import delayed_sgd_run, make_grouped_train_step
+from repro.core.implicit_momentum import measure_effective_momentum
+from repro.core.stat_model import measured_se_from_replay
+from repro.core.workload import mlp_classify, quadratic
+from repro.exec import (EventTrace, replay_trace, replay_trace_fused,
+                        replay_trace_python, replay_trace_scan,
+                        replayed_momentum_experiment)
+from repro.optim.sgd import init_momentum
+
+GOLDEN = pathlib.Path(__file__).resolve().parent / "golden"
+
+
+def _golden_args():
+    """Simulator arguments the fixtures were generated with (single source
+    of truth: tests/golden/make_golden.py, loaded by path — the tests tree
+    is not a package)."""
+    import importlib.util
+    spec = importlib.util.spec_from_file_location(
+        "make_golden", GOLDEN / "make_golden.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod.QUEUE_ARGS, mod.HETERO_ARGS
+
+
+def _leaves_close(a, b, rtol=1e-5, atol=1e-6):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=rtol, atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# EventTrace record
+# ---------------------------------------------------------------------------
+
+def test_trace_validation_and_staleness():
+    tr = EventTrace.round_robin(4, 12, mode="grouped")
+    assert len(tr) == 12 and tr.num_groups == 4
+    assert tr.staleness.tolist() == [0, 1, 2, 3] * 3
+    assert tr.max_staleness == 3
+    assert tr.equal_read_runs() == 4
+    td = EventTrace.round_robin(4, 12, mode="delayed")
+    assert td.staleness.tolist() == [0, 1, 2] + [3] * 9
+    assert td.equal_read_runs() is None
+    with pytest.raises(ValueError):       # read_version > t
+        EventTrace(num_groups=2, group=[0, 1], read_version=[0, 2],
+                   commit_time=[1.0, 2.0])
+    with pytest.raises(ValueError):       # group id out of range
+        EventTrace(num_groups=2, group=[0, 2], read_version=[0, 0],
+                   commit_time=[1.0, 2.0])
+
+
+def test_trace_save_load_roundtrip(tmp_path):
+    _, tr = queue_sim.simulate(g=3, t_conv=1.0, t_fc=0.1, iters=20,
+                               seed=5, return_trace=True)
+    p = tmp_path / "t.npz"
+    tr.save(p)
+    back = EventTrace.load(p)
+    assert back.num_groups == tr.num_groups
+    for f in ("group", "read_version", "commit_time"):
+        assert np.array_equal(getattr(back, f), getattr(tr, f))
+
+
+def test_truncate_keeps_validity():
+    _, tr = queue_sim.simulate(g=4, t_conv=1.0, t_fc=0.1, iters=30,
+                               seed=1, return_trace=True)
+    short = tr.truncate(7)
+    assert len(short) == 7
+    assert np.array_equal(short.read_version, tr.read_version[:7])
+
+
+# ---------------------------------------------------------------------------
+# Golden fixtures: event-loop semantics pinned bit-exactly
+# ---------------------------------------------------------------------------
+
+def test_golden_queue_sim_trace():
+    QUEUE_ARGS, _ = _golden_args()
+    golden = EventTrace.load(GOLDEN / "queue_sim_g4.npz")
+    _, fresh = queue_sim.simulate(**QUEUE_ARGS, return_trace=True)
+    assert fresh.num_groups == golden.num_groups
+    assert np.array_equal(fresh.group, golden.group)
+    assert np.array_equal(fresh.read_version, golden.read_version)
+    assert np.array_equal(fresh.commit_time, golden.commit_time)  # bit-exact
+
+
+def test_golden_hetero_trace():
+    _, HETERO_ARGS = _golden_args()
+    golden = EventTrace.load(GOLDEN / "hetero_g3.npz")
+    _, fresh = simulate_hetero(**HETERO_ARGS, return_trace=True)
+    assert fresh.num_groups == golden.num_groups
+    assert np.array_equal(fresh.group, golden.group)
+    assert np.array_equal(fresh.read_version, golden.read_version)
+    assert np.array_equal(fresh.commit_time, golden.commit_time)  # bit-exact
+
+
+def test_return_trace_does_not_change_sim_result():
+    kw = dict(g=3, t_conv=1.0, t_fc=0.2, iters=50, seed=11)
+    plain = queue_sim.simulate(**kw)
+    recorded, tr = queue_sim.simulate(**kw, return_trace=True)
+    assert plain.time_per_iteration == recorded.time_per_iteration
+    assert plain.mean_staleness == recorded.mean_staleness
+    assert np.array_equal(plain.staleness_hist, recorded.staleness_hist)
+    # the trace's own staleness reproduces the sim's bookkeeping
+    st = tr.staleness[len(tr) // 10:]
+    assert float(st.mean()) == plain.mean_staleness
+
+
+# ---------------------------------------------------------------------------
+# Conformance with the reference implementations
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("g", [2, 4])
+def test_delayed_round_robin_matches_delayed_sgd(g):
+    """Replay of the deterministic delayed-mode trace == delayed_sgd_run
+    at S = g-1 (params and per-step losses, fp32 tolerance)."""
+    wl = mlp_classify()
+    params = wl.init(jax.random.PRNGKey(0))
+    batches = wl.sample_batches(jax.random.PRNGKey(1), 3 * g, wl.batch_size)
+    tr = EventTrace.round_robin(g, 3 * g, mode="delayed")
+    ref_p, ref_l, _ = delayed_sgd_run(wl.loss_fn, params, batches,
+                                      staleness=g - 1, lr=0.05, momentum=0.6)
+    for impl in ("python", "scan"):
+        got_p, got_l, _ = replay_trace(wl.loss_fn, params, batches, tr,
+                                       lr=0.05, momentum=0.6, impl=impl)
+        _leaves_close(got_p, ref_p)
+        np.testing.assert_allclose(np.asarray(got_l), np.asarray(ref_l),
+                                   rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("g", [1, 2, 4])
+def test_grouped_round_robin_matches_scan_strategy(g):
+    """Replay of the grouped-mode trace == the ``strategy="scan"`` grouped
+    reference applied round by round (momentum + weight decay on)."""
+    wl = mlp_classify()
+    params = wl.init(jax.random.PRNGKey(0))
+    rounds = 3
+    batches = wl.sample_batches(jax.random.PRNGKey(1), rounds * g,
+                                wl.batch_size)
+    tr = EventTrace.round_robin(g, rounds * g, mode="grouped")
+    step = make_grouped_train_step(wl.loss_fn, num_groups=g, lr=0.05,
+                                   momentum=0.6, weight_decay=0.01,
+                                   strategy="scan")
+    p, m = params, init_momentum(params)
+    for r in range(rounds):
+        gb = jax.tree.map(lambda x: x[r * g:(r + 1) * g], batches)
+        p, m, _ = step(p, m, gb)
+    for impl in ("python", "scan", "fused"):
+        got_p, _, _ = replay_trace(wl.loss_fn, params, batches, tr, lr=0.05,
+                                   momentum=0.6, weight_decay=0.01,
+                                   impl=impl)
+        _leaves_close(got_p, p, rtol=2e-5, atol=2e-6)
+
+
+def test_scan_replay_equals_python_on_stochastic_trace():
+    """Jittable replay == Python reference along a simulated trace."""
+    wl = mlp_classify()
+    params = wl.init(jax.random.PRNGKey(2))
+    _, tr = queue_sim.simulate(g=3, t_conv=1.0, t_fc=0.1, iters=24,
+                               seed=13, return_trace=True)
+    batches = wl.sample_batches(jax.random.PRNGKey(3), len(tr),
+                                wl.batch_size)
+    ref_p, ref_l, ref_t = replay_trace_python(
+        wl.loss_fn, params, batches, tr, lr=0.05, momentum=0.3,
+        weight_decay=0.01, record_params=True)
+    got_p, got_l, got_t = replay_trace_scan(
+        wl.loss_fn, params, batches, tr, lr=0.05, momentum=0.3,
+        weight_decay=0.01, record_params=True)
+    _leaves_close(got_p, ref_p)
+    _leaves_close(got_t, ref_t)
+    np.testing.assert_allclose(np.asarray(got_l), ref_l, rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_fused_requires_run_structure():
+    _, tr = queue_sim.simulate(g=3, t_conv=1.0, t_fc=0.1, iters=20,
+                               seed=17, return_trace=True)
+    assert tr.equal_read_runs() is None
+    wl = mlp_classify()
+    params = wl.init(jax.random.PRNGKey(0))
+    batches = wl.sample_batches(jax.random.PRNGKey(1), len(tr),
+                                wl.batch_size)
+    with pytest.raises(ValueError):
+        replay_trace_fused(wl.loss_fn, params, batches, tr, lr=0.05)
+    # fused keeps no history: a depth cap must error, not silently no-op
+    grouped = EventTrace.round_robin(4, 20, mode="grouped")
+    with pytest.raises(ValueError):
+        replay_trace(wl.loss_fn, params, batches, grouped, lr=0.05,
+                     impl="fused", depth=2)
+
+
+def test_depth_buckets_staleness_to_ring():
+    """depth=1 keeps only the live version: every commit reads fresh
+    params — identical to replaying the zero-staleness trace."""
+    wl = mlp_classify()
+    params = wl.init(jax.random.PRNGKey(4))
+    _, tr = queue_sim.simulate(g=4, t_conv=1.0, t_fc=0.1, iters=16,
+                               seed=23, return_trace=True)
+    assert tr.max_staleness >= 1
+    batches = wl.sample_batches(jax.random.PRNGKey(5), len(tr),
+                                wl.batch_size)
+    fresh = EventTrace(num_groups=tr.num_groups, group=tr.group,
+                       read_version=np.arange(len(tr)),
+                       commit_time=tr.commit_time)
+    ref_p, _, _ = replay_trace_scan(wl.loss_fn, params, batches, fresh,
+                                    lr=0.05, momentum=0.3)
+    got_p, _, _ = replay_trace_scan(wl.loss_fn, params, batches, tr,
+                                    lr=0.05, momentum=0.3, depth=1)
+    _leaves_close(got_p, ref_p)
+
+
+# ---------------------------------------------------------------------------
+# Theorem 1, executed (paper Fig. 6) — the acceptance experiment
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("g,runs", [(2, 2000), (4, 600), (8, 600)])
+def test_replayed_momentum_recovers_one_minus_inv_g(g, runs):
+    """Replaying exponential-service traces (explicit mu = 0) through
+    ``measure_effective_momentum`` recovers 1 - 1/g within 10%."""
+    traj = replayed_momentum_experiment(g, eta=0.2, steps=300, runs=runs,
+                                        seed=g)
+    w = traj[3:]
+    keep = np.nonzero(np.abs(w) >= 1e-3)[0]   # drop the MC-noise tail
+    if keep.size:
+        w = w[:keep[-1] + 1]
+    mu = measure_effective_momentum(w[:, None], w[:, None], lr=0.2,
+                                    fit_lr=True)
+    th = 1.0 - 1.0 / g
+    assert abs(mu - th) / th < 0.10, (g, mu, th)
+
+
+# ---------------------------------------------------------------------------
+# Measured SE from replayed executions
+# ---------------------------------------------------------------------------
+
+def test_measured_se_from_replay_semantics():
+    curves = {1: np.linspace(1.0, 0.0, 101),          # hits 0.5 at ~50
+              4: np.linspace(1.0, 0.5, 101),          # hits 0.5 at 100
+              8: np.full(101, 1.0)}                   # never converges
+    out = measured_se_from_replay(curves, 0.5, smooth=1)
+    assert out[1]["P_SE"] == pytest.approx(1.0)
+    assert out[4]["se_iters"] > out[1]["se_iters"]
+    assert out[4]["P_SE"] == pytest.approx(out[4]["se_iters"]
+                                           / out[1]["se_iters"])
+    assert out[8]["se_iters"] is None and out[8]["P_SE"] is None
+    with pytest.raises(ValueError):       # no sync baseline to normalize to
+        measured_se_from_replay({2: curves[4], 4: curves[4]}, 0.5)
+
+
+def test_planner_accepts_measured_se_penalties():
+    from repro.cluster import DeviceSpec, best_allocation
+    devices = tuple(DeviceSpec(f"d{i}", "cpu", 1e12, 1e11, 1e9,
+                               throughput=100.0) for i in range(4))
+    kw = dict(global_batch=16, t_fc=1e-4)
+    analytic = best_allocation(devices, **kw)
+    # measured penalties that make large g terrible force the plan sync
+    measured = {g: (1.0 if g == 1 else 100.0) for g in range(1, 5)}
+    calibrated = best_allocation(devices, se_penalties=measured, **kw)
+    assert calibrated.g == 1
+    assert calibrated.se_penalty == 1.0
+    assert analytic.time_score > 0
+
+
+# ---------------------------------------------------------------------------
+# Convergence-scale replays (non-blocking slow CI job)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_replay_se_convergence_hundreds_of_commits():
+    """Replaying a stale trace must not converge faster than the sync
+    trace on a smooth problem; measured_se_from_replay sees the ordering."""
+    wl = quadratic(dim=8, cond=3.0, noise=0.0)
+    params = wl.init(jax.random.PRNGKey(0))
+    steps = 400
+    batches = wl.sample_batches(jax.random.PRNGKey(1), steps, 1)
+    curves = {}
+    for g in (1, 8):
+        tr = EventTrace.round_robin(g, steps, mode="delayed")
+        _, losses, _ = replay_trace_scan(wl.loss_fn, params, batches, tr,
+                                         lr=0.3, momentum=0.0)
+        curves[g] = np.asarray(losses)
+    target = float(np.convolve(curves[1], np.ones(5) / 5,
+                               mode="valid")[:240].min())
+    out = measured_se_from_replay(curves, target)
+    assert out[1]["se_iters"] is not None
+    se8 = out[8]["se_iters"]
+    assert se8 is None or se8 >= out[1]["se_iters"]
+
+
+@pytest.mark.slow
+def test_train_driver_replay_smoke(tmp_path):
+    """launch/train.py --replay-trace end-to-end on a recorded trace."""
+    from repro.launch import train as train_mod
+    _, tr = queue_sim.simulate(g=4, t_conv=1.0, t_fc=0.05, iters=16,
+                               seed=2, return_trace=True)
+    p = tmp_path / "trace.npz"
+    tr.save(p)
+    losses = train_mod.main([
+        "--arch", "qwen2-7b", "--smoke", "--steps", "12", "--batch", "2",
+        "--seq", "16", "--lr", "0.05", "--momentum", "0.3",
+        "--replay-trace", str(p)])
+    assert len(losses) == 12
+    assert np.isfinite(losses).all()
