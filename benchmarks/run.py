@@ -15,14 +15,19 @@ metric).
 from __future__ import annotations
 
 import json
-import time
 from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+import os
+import sys
+
 ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.engine.timing import monotonic  # noqa: E402  (one clock repo-wide)
 
 
 def _row(name, us, derived):
@@ -37,9 +42,9 @@ def _timeit(fn, warmup: int = 1, iters: int = 5) -> float:
         jax.block_until_ready(fn())
     times = []
     for _ in range(iters):
-        t0 = time.perf_counter()
+        t0 = monotonic()
         jax.block_until_ready(fn())
-        times.append(time.perf_counter() - t0)
+        times.append(monotonic() - t0)
     return float(np.median(times))
 
 
@@ -74,10 +79,10 @@ def fig5_he_model():
     from repro.core import queue_sim
     ph = hm.PhaseTimes(t_conv_compute_1=1.0, t_fc=0.08, conv_grad_bytes=0.0)
     for g in (1, 2, 4, 8, 16, 32):
-        t0 = time.time()
+        t0 = monotonic()
         sim = queue_sim.simulate(g=g, t_conv=1.0 / (32 // g), t_fc=0.08,
                                  iters=2000, exponential=False)
-        us = (time.time() - t0) * 1e6
+        us = (monotonic() - t0) * 1e6
         pred = hm.he_time_per_iteration(g, 32, ph)
         _row(f"fig5_he_g{g}", us,
              f"pred={pred:.4f};sim={sim.time_per_iteration:.4f};"
@@ -89,10 +94,10 @@ def fig6_implicit_momentum():
                                               fit_ar2_momentum,
                                               implicit_momentum)
     for g in (2, 4, 8, 16):
-        t0 = time.time()
+        t0 = monotonic()
         traj = async_quadratic_sim(g=g, eta=0.2, steps=250, runs=1500)
         mu, eta_eff = fit_ar2_momentum(traj[3:])
-        us = (time.time() - t0) * 1e6
+        us = (monotonic() - t0) * 1e6
         _row(f"fig6_mom_g{g}", us,
              f"measured={mu:.3f};theory={implicit_momentum(g):.3f};"
              f"eta_eff={eta_eff:.4f}")
@@ -119,13 +124,13 @@ def fig7_tradeoff():
     target, steps, N = 0.55, 500, 16
     base_total = None
     for g in (1, 2, 4, 8, 16):
-        t0 = time.time()
+        t0 = monotonic()
         best = (None, None)
         for mu in (0.0, 0.3, 0.6, 0.9):
             it = _se_iters(wl, params, g, mu, 0.05, steps, target)
             if it is not None and (best[0] is None or it < best[0]):
                 best = (it, mu)
-        us = (time.time() - t0) * 1e6
+        us = (monotonic() - t0) * 1e6
         he = hm.he_time_per_iteration(g, N, ph)
         if best[0] is None:
             _row(f"fig7_g{g}", us, "no-convergence")
@@ -145,7 +150,7 @@ def fig13_momentum_lesion():
     params = wl.init(jax.random.PRNGKey(0))
     g, steps, target = 4, 500, 0.55
     for name, fixed_mu in (("default_0.9", 0.9), ("omnivore_tuned", None)):
-        t0 = time.time()
+        t0 = monotonic()
         if fixed_mu is None:
             cands = [(m, _se_iters(wl, params, g, m, 0.05, steps, target))
                      for m in (0.0, 0.3, 0.6, 0.9)]
@@ -154,7 +159,7 @@ def fig13_momentum_lesion():
         else:
             mu, iters = fixed_mu, _se_iters(wl, params, g, fixed_mu, 0.05,
                                             steps, target)
-        us = (time.time() - t0) * 1e6
+        us = (monotonic() - t0) * 1e6
         _row(f"fig13_{name}", us, f"mu={mu};iters={iters}")
 
 
@@ -167,7 +172,7 @@ def fig23_batch_size():
         wl = mlp_classify(batch_size=b)
         params = wl.init(jax.random.PRNGKey(0))
         best = None
-        t0 = time.time()
+        t0 = monotonic()
         for eta in (0.2, 0.1, 0.05, 0.02):
             batches = wl.sample_batches(jax.random.PRNGKey(1), 400, b)
             _, losses, _ = delayed_sgd_run(wl.loss_fn, params, batches,
@@ -175,7 +180,7 @@ def fig23_batch_size():
             it = iterations_to_loss(np.asarray(losses), target)
             if it is not None and (best is None or it * b < best[0]):
                 best = (it * b, eta, it)
-        us = (time.time() - t0) * 1e6
+        us = (monotonic() - t0) * 1e6
         d = (f"examples_to_target={best[0]};eta*={best[1]};iters={best[2]}"
              if best else "no-convergence")
         _row(f"fig23_b{b}", us, d)
@@ -191,13 +196,13 @@ def fig32_rnn_tradeoff():
     target, steps, N = 0.30, 350, 16
     base = None
     for g in (1, 2, 4, 8):
-        t0 = time.time()
+        t0 = monotonic()
         best = (None, None)
         for mu in (0.0, 0.3, 0.6, 0.9):
             it = _se_iters(wl, params, g, mu, 0.1, steps, target)
             if it is not None and (best[0] is None or it < best[0]):
                 best = (it, mu)
-        us = (time.time() - t0) * 1e6
+        us = (monotonic() - t0) * 1e6
         he = hm.he_time_per_iteration(g, N, ph)
         if best[0] is None:
             _row(f"fig32_rnn_g{g}", us, "no-convergence")
@@ -221,7 +226,7 @@ def fig33_schedules():
     state = init_state(wl, seed=0)
 
     # fixed schedule: eta drops 10x at step 150 (CaffeNet-style)
-    t0 = time.time()
+    t0 = monotonic()
     params = state[0]
     sched = step_decay(0.1, drop=10.0, every=150)
     losses = []
@@ -232,14 +237,14 @@ def fig33_schedules():
                                        staleness=0, lr=sched(phase * 150),
                                        momentum=0.9)
         losses.append(np.asarray(l))
-    us = (time.time() - t0) * 1e6
+    us = (monotonic() - t0) * 1e6
     _row("fig33_default_schedule", us,
          f"final={np.concatenate(losses)[-20:].mean():.4f}")
 
-    t0 = time.time()
+    t0 = monotonic()
     res = algorithm1(runner, state, n_devices=16, epochs=1, epoch_steps=150,
                      probe_steps=30, g0=4)
-    us = (time.time() - t0) * 1e6
+    us = (monotonic() - t0) * 1e6
     _row("fig33_omnivore_retune", us,
          f"final={res.losses[-20:].mean():.4f};g={res.g};mu={res.mu};"
          f"eta={res.eta}")
@@ -253,10 +258,10 @@ def table_optimizer_vs_bayes():
     runner = make_runner(wl, seed=0)
     state = init_state(wl, seed=0)
 
-    t0 = time.time()
+    t0 = monotonic()
     res = algorithm1(runner, state, n_devices=16, epochs=1, epoch_steps=150,
                      probe_steps=25, g0=8)
-    us1 = (time.time() - t0) * 1e6
+    us1 = (monotonic() - t0) * 1e6
     alg1_loss = float(res.losses[-20:].mean())
     _row("alg1_optimizer", us1,
          f"g={res.g};mu={res.mu};eta={res.eta};loss={alg1_loss:.4f}")
@@ -267,11 +272,11 @@ def table_optimizer_vs_bayes():
         arr = arr[np.isfinite(arr)]
         return float(arr[-20:].mean()) if arr.size else float("inf")
 
-    t0 = time.time()
+    t0 = monotonic()
     bres = gp_ei_minimize(objective, etas=(0.1, 0.01, 0.001),
                           mus=(0.0, 0.3, 0.6, 0.9), gs=(1, 2, 4, 8),
                           budget=12, seed=0)
-    us2 = (time.time() - t0) * 1e6
+    us2 = (monotonic() - t0) * 1e6
     _row("bayes_optimizer", us2,
          f"evals={bres.evaluations};best={bres.best_y:.4f};"
          f"wall_ratio_vs_alg1={us2/max(us1,1):.1f}x")
@@ -340,10 +345,10 @@ def bench_planner():
                                 bytes_per_example=2e8, grad_bytes=4e6)
     batch, t_fc = 64, 0.002
 
-    t0 = time.perf_counter()
+    t0 = monotonic()
     plan = cluster.best_allocation(devices, global_batch=batch, t_fc=t_fc,
                                    cost=cost, mu_star_total=0.9)
-    search_s = time.perf_counter() - t0
+    search_s = monotonic() - t0
 
     sim = cluster.simulate_hetero(t_conv=plan.group_times, t_fc=t_fc,
                                   iters=3000, exponential=False)
@@ -372,6 +377,66 @@ def bench_planner():
     (ROOT / "BENCH_planner.json").write_text(json.dumps(out, indent=2))
 
 
+def _engine_probe(gs=(1, 2, 4, 8)):
+    """Child-process half of ``bench_engine``: time the unified engine's
+    grouped step per g at whatever device count XLA_FLAGS forced, print one
+    JSON line. Run via ``python benchmarks/run.py --engine-probe``."""
+    from repro.core.workload import mlp_classify
+    from repro.engine import Engine
+
+    wl = mlp_classify(batch_size=64)
+    params = wl.init(jax.random.PRNGKey(0))
+    batch = jax.tree.map(lambda x: x[0],
+                         wl.sample_batches(jax.random.PRNGKey(1), 1, 64))
+    rows = []
+    for g in gs:
+        eng = Engine(wl.loss_fn, strategy="grouped-fused", num_groups=g,
+                     lr=0.05, momentum=0.9, donate=False)
+        p, m = params, jax.tree.map(jnp.zeros_like, params)
+        for _ in range(12):          # telemetry skips the compile step
+            p, m, _ = eng.step(p, m, batch)
+        built = next(iter(eng._steps.values()))
+        rows.append({"g": g, "mode": built.mode, "k": built.k,
+                     "step_us": eng.telemetry.median_step_s() * 1e6})
+    print(json.dumps({"device_count": jax.device_count(), "rows": rows}))
+
+
+def bench_engine():
+    """Unified-engine grouped step: wall time per g on 1 vs 8 forced host
+    CPU devices (the SPMD ("group","data") mesh vs the single-device
+    path). Emits BENCH_engine.json for cross-PR perf tracking. Each device
+    count needs its own XLA runtime, so the probes run as child
+    processes."""
+    import subprocess
+
+    results = []
+    for n in (1, 8):
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+        env.setdefault("JAX_PLATFORMS", "cpu")
+        env["PYTHONPATH"] = str(ROOT / "src") + os.pathsep + \
+            env.get("PYTHONPATH", "")
+        proc = subprocess.run(
+            [sys.executable, str(ROOT / "benchmarks" / "run.py"),
+             "--engine-probe"],
+            env=env, capture_output=True, text=True, timeout=600)
+        if proc.returncode != 0:
+            raise RuntimeError(f"engine probe (devices={n}) failed:\n"
+                               + proc.stderr[-2000:])
+        data = json.loads(proc.stdout.strip().splitlines()[-1])
+        results.append(data)
+        for row in data["rows"]:
+            _row(f"engine_d{data['device_count']}_g{row['g']}",
+                 row["step_us"], f"mode={row['mode']};k={row['k']}")
+
+    out = {"bench": "engine", "workload": "mlp_classify(batch=64)",
+           "strategy": "grouped-fused",
+           "timeit": {"steps": 12, "stat": "median", "skip": 1},
+           "device_counts": [r["device_count"] for r in results],
+           "runs": results}
+    (ROOT / "BENCH_engine.json").write_text(json.dumps(out, indent=2))
+
+
 def roofline_table():
     d = ROOT / "experiments" / "dryrun"
     rows = sorted(d.glob("*__16x16.json"))
@@ -395,17 +460,20 @@ BENCHES = [fig4_lowering_blocksize, fig5_he_model, fig6_implicit_momentum,
            fig7_tradeoff, fig13_momentum_lesion, fig23_batch_size,
            fig32_rnn_tradeoff, fig33_schedules,
            table_optimizer_vs_bayes, bench_grouped_step, bench_planner,
-           roofline_table]
+           bench_engine, roofline_table]
 
 
 def main() -> None:
+    if "--engine-probe" in sys.argv:
+        _engine_probe()
+        return
     print("name,us_per_call,derived")
     for bench in BENCHES:
-        t0 = time.time()
+        t0 = monotonic()
         try:
             bench()
         except Exception as e:  # keep the harness running
-            _row(bench.__name__, (time.time() - t0) * 1e6,
+            _row(bench.__name__, (monotonic() - t0) * 1e6,
                  f"ERROR={type(e).__name__}:{str(e)[:80]}")
 
 

@@ -17,12 +17,11 @@ import numpy as np
 
 from repro import cluster
 from repro.core import hardware_model as hm
-from repro.core.async_sgd import make_grouped_train_step
 from repro.core.auto_optimizer import algorithm1
-from repro.core.compute_groups import group_batch_split
 from repro.core.implicit_momentum import optimal_explicit_momentum
 from repro.core.stat_model import iterations_to_loss
 from repro.core.workload import cnn_classify, init_state, make_runner
+from repro.engine import Engine
 
 N_DEVICES = 16
 TARGET = 0.5
@@ -66,22 +65,19 @@ def hetero_plan_and_train(wl, runner, state):
           f"mean staleness {sim.mean_staleness:.2f}")
 
     # train at the planned allocation: throughput-proportional microbatches
-    # + share-weighted grouped updates (merged-FC head included)
+    # + share-weighted grouped updates (merged-FC head included) — the
+    # same engine step train.py and Algorithm 1 drive
     mu = optimal_explicit_momentum(plan.g, 0.9)
-    step = jax.jit(make_grouped_train_step(
-        wl.loss_fn, num_groups=plan.g, lr=0.05, momentum=mu,
-        head_filter=wl.head_filter, group_weights=plan.weights))
+    engine = Engine(wl.loss_fn, num_groups=plan.g, lr=0.05, momentum=mu,
+                    head_filter=wl.head_filter, group_weights=plan.weights,
+                    micro_sizes=plan.allocation.microbatches)
     mom = jax.tree.map(jnp.zeros_like, params)
     batches = wl.sample_batches(jax.random.PRNGKey(11), 60, wl.batch_size)
-    p = params
-    losses = []
-    for t in range(60):
-        b = jax.tree.map(lambda x: x[t], batches)
-        gb = group_batch_split(b, plan.g, sizes=plan.allocation.microbatches)
-        p, mom, loss = step(p, mom, gb)
-        losses.append(float(loss))
+    batch_iter = (jax.tree.map(lambda x: x[t], batches) for t in range(60))
+    _, _, losses = engine.run(params, mom, batch_iter, steps=60)
     print(f"  weighted grouped train @ g={plan.g}, mu={mu:.2f}: "
-          f"loss {losses[0]:.4f} -> {np.mean(losses[-5:]):.4f}")
+          f"loss {losses[0]:.4f} -> {np.mean(losses[-5:]):.4f} "
+          f"({engine.telemetry.median_step_s() * 1e3:.1f} ms/step)")
 
     # and Algorithm 1 seeded by the planner instead of the homogeneous
     # FC-saturation short-circuit

@@ -7,8 +7,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_smoke_config
-from repro.core.async_sgd import make_grouped_train_step
-from repro.core.compute_groups import GroupSpec, group_batch_split
+from repro.core.compute_groups import GroupSpec
+from repro.engine import Engine
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.models import transformer as T
 from repro.optim.sgd import init_momentum
@@ -17,26 +17,20 @@ from repro.optim.sgd import init_momentum
 def main():
     cfg = get_smoke_config("qwen2-7b")
     g = 4                                     # compute groups (paper §IV)
-    spec = GroupSpec(num_groups=g, num_devices=max(g, jax.device_count()))
-    print(f"{cfg.name}: g={g}, staleness={spec.staleness}, "
-          f"implicit momentum={spec.implicit_momentum:.2f} "
-          f"-> tuned explicit momentum {0.9 - spec.implicit_momentum:.2f}")
+    spec = GroupSpec(num_groups=g, num_devices=g)
+    mu = max(0.0, 0.9 - spec.implicit_momentum)
+    engine = Engine(lambda p, b: T.lm_loss(p, b, cfg), num_groups=g,
+                    lr=0.05, momentum=mu)
+    print(f"{cfg.name}: {engine.describe(g, 16 // g)} "
+          f"-> tuned explicit momentum {mu:.2f}")
 
     params = T.init_params(jax.random.PRNGKey(0), cfg)
     mom = init_momentum(params)
-    step = jax.jit(make_grouped_train_step(
-        lambda p, b: T.lm_loss(p, b, cfg),
-        num_groups=g, lr=0.05,
-        momentum=max(0.0, 0.9 - spec.implicit_momentum)))
-
     data = SyntheticLM(DataConfig(batch_size=16, seq_len=64,
                                   vocab_size=cfg.vocab_size, seed=0))
-    losses = []
-    for i, batch in enumerate(data.batches(40)):
-        params, mom, loss = step(params, mom, group_batch_split(batch, g))
-        losses.append(float(loss))
-        if i % 10 == 0:
-            print(f"  step {i:3d}  loss {loss:.4f}")
+    params, mom, losses = engine.run(params, mom, data.batches(40), steps=40,
+                                     log_every=10,
+                                     log=lambda s: print(" ", s))
     assert losses[-1] < losses[0], "training must reduce loss"
 
     # greedy decode with KV cache

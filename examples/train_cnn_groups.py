@@ -9,13 +9,12 @@ import argparse
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.async_sgd import make_grouped_train_step
-from repro.core.compute_groups import GroupSpec, group_batch_split
+from repro.core.compute_groups import GroupSpec
 from repro.core.implicit_momentum import optimal_explicit_momentum
 from repro.data.pipeline import DataConfig, SyntheticImages
+from repro.engine import Engine
 from repro.models import cnn
 from repro.optim.sgd import init_momentum
 
@@ -28,16 +27,12 @@ def run(g, steps, mu_star_sync=0.9, lr=0.05, batch=16):
     mu = optimal_explicit_momentum(g, mu_star_sync)
     params = cnn.init_params(jax.random.PRNGKey(0), CFG)
     mom = init_momentum(params)
-    step = jax.jit(make_grouped_train_step(
-        lambda p, b: cnn.loss_fn(p, b, CFG), num_groups=g, lr=lr, momentum=mu,
-        head_filter=cnn.head_filter))     # merged-FC: sync head updates
+    engine = Engine(lambda p, b: cnn.loss_fn(p, b, CFG), num_groups=g,
+                    lr=lr, momentum=mu,
+                    head_filter=cnn.head_filter)  # merged-FC: sync head
     data = SyntheticImages(DataConfig(batch_size=batch, image_size=12,
                                       num_classes=4, channels=1, seed=0))
-    losses = []
-    for batch_data in data.batches(steps):
-        params, mom, loss = step(params, mom,
-                                 group_batch_split(batch_data, g))
-        losses.append(float(loss))
+    _, _, losses = engine.run(params, mom, data.batches(steps), steps=steps)
     return mu, losses
 
 

@@ -120,7 +120,8 @@ def replay_compare(gs=(1, 2, 4, 8), steps=400, momentum_runs=800, seed=0):
     from repro.core.stat_model import (measured_se_from_replay,
                                        predict_se_penalty)
     from repro.core.workload import mlp_classify
-    from repro.exec import replay_trace_scan, replayed_momentum_experiment
+    from repro.engine import Engine
+    from repro.exec import replayed_momentum_experiment
 
     gs = tuple(sorted(set(gs) | {1}))   # P_SE normalizes to the sync run
     wl = mlp_classify()
@@ -134,8 +135,10 @@ def replay_compare(gs=(1, 2, 4, 8), steps=400, momentum_runs=800, seed=0):
                                       seed=seed, return_trace=True)
         # drop warmup like SimResult.mean_staleness does
         sim_staleness[g] = float(trace.staleness[len(trace) // 10:].mean())
-        _, losses, _ = replay_trace_scan(wl.loss_fn, params, batches, trace,
-                                         lr=0.05, momentum=0.0)
+        # the same engine replay strategy train.py drives
+        eng = Engine(wl.loss_fn, strategy="trace-replay", trace=trace,
+                     lr=0.05, momentum=0.0, replay_impl="scan")
+        _, losses = eng.replay(params, batches)
         curves[g] = np.asarray(losses)
     # target: the loss the sync run reaches at 60% of the budget
     k = max(1, int(0.6 * steps))

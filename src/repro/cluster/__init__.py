@@ -8,7 +8,7 @@ from repro.cluster.allocator import Allocation, allocate, rebalance
 from repro.cluster.devices import (DeviceSpec, WorkloadCost, get_device,
                                    list_devices, parse_cluster_spec,
                                    profile_device, profiled_spec,
-                                   register_device)
+                                   register_device, spec_from_telemetry)
 from repro.cluster.planner import (Plan, best_allocation,
                                    hetero_time_per_iteration, plan_for_g)
 from repro.cluster.sim import simulate_hetero
@@ -17,7 +17,7 @@ __all__ = [
     "Allocation", "allocate", "rebalance",
     "DeviceSpec", "WorkloadCost", "get_device", "list_devices",
     "parse_cluster_spec", "profile_device", "profiled_spec",
-    "register_device",
+    "register_device", "spec_from_telemetry",
     "Plan", "best_allocation", "hetero_time_per_iteration", "plan_for_g",
     "simulate_hetero",
 ]

@@ -156,3 +156,13 @@ def profiled_spec(spec: DeviceSpec, step_fn: Callable, args: Sequence, *,
     thr = profile_device(step_fn, args, batch_size=batch_size,
                          warmup=warmup, iters=iters)
     return dataclasses.replace(spec, throughput=thr)
+
+
+def spec_from_telemetry(spec: DeviceSpec, telemetry, *,
+                        batch_size: int) -> DeviceSpec:
+    """``spec`` with throughput taken from an execution engine's per-step
+    telemetry (``repro.engine.timing.Telemetry``) — the planner-calibration
+    path that needs no extra probe run: the training steps the engine
+    already timed ARE the black-box measurement."""
+    return dataclasses.replace(
+        spec, throughput=telemetry.throughput(batch_size))

@@ -39,7 +39,6 @@ import jax.numpy as jnp
 from repro.kernels.fused_update.ops import fused_group_update
 from repro.optim.closed_form import (_weight_scales, grouped_coeffs,
                                      head_coeffs)
-from repro.optim.sgd import sgd_update
 
 
 # ---------------------------------------------------------------------------
@@ -121,10 +120,13 @@ def scan_grouped_update(params, grads, mom_buf, *, lr: float, momentum: float,
             lambda gr: gr * sarr.reshape((g,) + (1,) * (gr.ndim - 1)).astype(
                 gr.dtype), grads)
 
-    if g == 1:
-        grads0 = jax.tree.map(lambda gr: gr[0], grads)
-        return sgd_update(params, grads0, mom_buf, lr=lr, momentum=momentum,
-                          weight_decay=weight_decay)
+    # g == 1 deliberately takes the same one-iteration lax.scan path below
+    # instead of shortcutting to sgd_update: one code path for every g, so
+    # the engine's spmd/reference conformance suite exercises exactly what
+    # g>1 runs (the shortcut compiled its weight-decay arithmetic with a
+    # different FMA contraction than the scan body in some surrounding
+    # programs — a one-ulp context dependence the single path avoids at
+    # the suite's weight_decay=0 operating point; see docs/engine.md).
 
     # merged-FC head: single synchronous (share-weighted) averaged update
     # per round — with pre-scaled gradients the plain mean is that average
@@ -162,6 +164,52 @@ def scan_grouped_update(params, grads, mom_buf, *, lr: float, momentum: float,
     mom_buf = jax.tree.map(lambda t: t[1], new,
                            is_leaf=lambda t: isinstance(t, tuple))
     return params, mom_buf
+
+
+def apply_grouped_update(params, grads, mom_buf, *, strategy: str, lr: float,
+                         momentum: float, weight_decay: float = 0.0,
+                         head_mask=None,
+                         group_weights: Optional[Sequence[float]] = None,
+                         update_impl: str = "xla",
+                         interpret: Optional[bool] = None,
+                         coeffs=None, hcoeffs=None):
+    """Apply one round of grouped updates (``grads`` leading axis = g) via
+    either strategy — the single update-application entry point shared by
+    ``make_grouped_train_step`` and the execution engine
+    (``repro.engine``). Returns ``(params, mom_buf)``.
+
+    ``coeffs`` / ``hcoeffs`` (``optim.closed_form``) may be precomputed by
+    the caller for the fused path; when omitted they are derived here from
+    (g, lr, momentum, weight_decay, group_weights).
+    """
+    if strategy == "scan":
+        return scan_grouped_update(
+            params, grads, mom_buf, lr=lr, momentum=momentum,
+            weight_decay=weight_decay, head_mask=head_mask,
+            group_weights=group_weights)
+    if strategy != "fused":
+        raise ValueError(f"unknown strategy {strategy!r}")
+    g = jax.tree.leaves(grads)[0].shape[0]
+    if coeffs is None:
+        coeffs = grouped_coeffs(g, lr=lr, momentum=momentum,
+                                weight_decay=weight_decay,
+                                group_weights=group_weights)
+    if hcoeffs is None:
+        hcoeffs = head_coeffs(g, lr=lr, momentum=momentum,
+                              weight_decay=weight_decay,
+                              group_weights=group_weights)
+    return fused_group_update(params, grads, mom_buf, coeffs=coeffs,
+                              head_coeffs=hcoeffs, head_mask=head_mask,
+                              impl=update_impl, interpret=interpret)
+
+
+def head_mask_tree(params, head_filter: Optional[Callable]):
+    """Python-bool tree marking merged-FC head leaves (True) — the mask
+    consumed by both update strategies."""
+    if head_filter is None:
+        return jax.tree.map(lambda _: False, params)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, _: bool(head_filter(path)), params)
 
 
 def make_grouped_train_step(loss_fn: Callable, *, num_groups: int, lr: float,
@@ -219,25 +267,15 @@ def make_grouped_train_step(loss_fn: Callable, *, num_groups: int, lr: float,
         (l, gr), _ = jax.lax.scan(acc_step, (jnp.float32(0.0), zeros), batch)
         return l / grad_accum, jax.tree.map(lambda x: x / grad_accum, gr)
 
-    def is_head_tree(params):
-        if head_filter is None:
-            return jax.tree.map(lambda _: False, params)
-        return jax.tree_util.tree_map_with_path(
-            lambda path, _: bool(head_filter(path)), params)
-
     def step(params, mom_buf, batches):
         # all group gradients at round-start params, in parallel
         losses, grads = jax.vmap(per_group_grad, in_axes=(None, 0))(params, batches)
-        head_mask = is_head_tree(params)
-        if strategy == "scan":
-            params, mom_buf = scan_grouped_update(
-                params, grads, mom_buf, lr=lr, momentum=momentum,
-                weight_decay=weight_decay, head_mask=head_mask,
-                group_weights=group_weights)
-        else:
-            params, mom_buf = fused_group_update(
-                params, grads, mom_buf, coeffs=coeffs, head_coeffs=hcoeffs,
-                head_mask=head_mask, impl=update_impl, interpret=interpret)
+        params, mom_buf = apply_grouped_update(
+            params, grads, mom_buf, strategy=strategy, lr=lr,
+            momentum=momentum, weight_decay=weight_decay,
+            head_mask=head_mask_tree(params, head_filter),
+            group_weights=group_weights, update_impl=update_impl,
+            interpret=interpret, coeffs=coeffs, hcoeffs=hcoeffs)
         return params, mom_buf, losses.mean()
 
     return step

@@ -9,7 +9,9 @@ initial g comes from the HE model's FC-saturation short-circuit.
 The optimizer is decoupled from the execution substrate through ``Runner``:
     runner(state, *, g, mu, eta, steps, probe) -> (new_state, losses)
 so the same Algorithm 1 drives CPU experiments (delayed SGD) and the SPMD
-grouped step.
+grouped step. The canonical Runner is an execution engine
+(``repro.engine.Engine`` — callable with exactly this protocol, built by
+``core.workload.make_runner``); any conforming callable works.
 """
 from __future__ import annotations
 

@@ -13,9 +13,7 @@ from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.async_sgd import delayed_sgd_run
 from repro.models import cnn as cnn_mod
 
 
@@ -137,24 +135,21 @@ def rnn_classify(dim: int = 8, hidden: int = 24, seq: int = 16,
 
 
 def make_runner(workload: Workload, *, seed: int = 0,
-                weight_decay: float = 0.0):
-    """Runner for Algorithm 1 backed by exact delayed SGD (staleness g-1).
-    state = (params, step_counter). Probe runs don't mutate the stream key
-    schedule (paper: probes restart from the same checkpoint)."""
-
-    def runner(state, *, g, mu, eta, steps, probe):
-        params, t0 = state
-        key = jax.random.fold_in(jax.random.PRNGKey(seed), t0 + (1 if probe else 0))
-        batches = workload.sample_batches(key, steps, workload.batch_size)
-        final, losses, _ = delayed_sgd_run(
-            workload.loss_fn, params, batches, staleness=g - 1,
-            lr=eta, momentum=mu, weight_decay=weight_decay)
-        losses = np.asarray(losses)
-        if probe:
-            return state, losses
-        return (final, t0 + steps), losses
-
-    return runner
+                weight_decay: float = 0.0, strategy: str = "delayed"):
+    """Runner for Algorithm 1: an ``Engine`` configured from the workload
+    (the engine *is* the Runner — ``repro.engine``). The default
+    ``strategy="delayed"`` keeps the historical semantics: exact delayed
+    SGD at staleness g-1, state = (params, step_counter), probe runs
+    restarting from the same checkpoint without mutating the stream key
+    schedule (paper App E). ``strategy="grouped-fused"``/``"grouped-scan"``
+    run the same protocol on the deployable (mesh-sharded where devices
+    allow) grouped step instead."""
+    from repro.engine import Engine   # deferred: engine imports this module's
+    #                                   sibling async_sgd, not workload itself
+    return Engine(workload.loss_fn, strategy=strategy,
+                  weight_decay=weight_decay, head_filter=workload.head_filter,
+                  sample_batches=workload.sample_batches,
+                  batch_size=workload.batch_size, seed=seed)
 
 
 def init_state(workload: Workload, seed: int = 0):

@@ -1,0 +1,8 @@
+"""Unified mesh-sharded execution engine: one ``Engine`` behind train /
+Algorithm 1 / replay, with real SPMD compute groups (see docs/engine.md)."""
+from repro.engine.engine import Engine
+from repro.engine.spmd import (choose_data_parallel, device_batch_split,
+                               make_reference_grouped_step,
+                               make_spmd_grouped_step)
+from repro.engine.strategies import get_strategy, list_strategies
+from repro.engine.timing import Telemetry, monotonic

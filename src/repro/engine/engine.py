@@ -1,0 +1,352 @@
+"""The unified execution engine — one object behind every training loop.
+
+``Engine`` owns what the four previous per-caller loops each re-implemented
+(``launch/train.py``'s hand-rolled loop + ``_replay_main``, the ad-hoc
+Runner closures behind Algorithm 1, the replay drivers, the experiment
+scripts):
+
+- mesh construction (``launch.mesh.make_group_mesh``) and the
+  ("group", "data") SPMD grouped step (``engine.spmd``) when devices are
+  available, with a bit-exact single-device reference and the legacy
+  vmapped path as fallbacks;
+- parameter/batch placement and buffer donation of the jitted step;
+- host-side batch preparation (group split, sized heterogeneous shares,
+  per-device shards) and prefetch;
+- per-step monotonic telemetry (``engine.timing``) that feeds the cluster
+  subsystem's black-box device profiling and planner calibration;
+- checkpoint hooks;
+- the Algorithm-1 ``Runner`` protocol: an Engine *is* a Runner —
+  ``engine(state, g=..., mu=..., eta=..., steps=..., probe=...)``.
+
+Execution strategies are plugins (``engine.strategies``): ``sync``,
+``grouped-fused``, ``grouped-scan``, ``trace-replay`` (+ ``delayed``, the
+Theorem-1-exact CPU substrate).
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compute_groups import GroupSpec
+from repro.data.pipeline import prefetch
+from repro.engine import timing
+from repro.engine.spmd import choose_data_parallel
+from repro.engine.strategies import Strategy, get_strategy
+
+
+class Engine:
+    """Unified mesh-sharded execution engine (see module docstring).
+
+    ``loss_fn(params, batch) -> scalar`` is the only model contract — the
+    engine is model-agnostic (transformer, CNN, MLP, LSTM share one loop).
+
+    Execution placement (``exec_mode``):
+      "auto"       SPMD mesh when >= g devices are visible, else the
+                   legacy single-device vmapped step
+      "spmd"       require the ("group", "data") mesh (error if the
+                   device pool is too small)
+      "reference"  the single-device bit-exact twin of the SPMD step
+                   (lax.map over the same (g, k) shard structure)
+      "vmap"       the legacy single-device path
+                   (``core.async_sgd.make_grouped_train_step``)
+
+    ``sample_batches(key, steps, batch_size)`` + ``batch_size`` enable the
+    Runner protocol (Algorithm 1). ``trace`` + strategy "trace-replay"
+    switch ``run`` to executing along the recorded event schedule.
+    """
+
+    def __init__(self, loss_fn: Callable, *, strategy: str = "grouped-fused",
+                 num_groups: int = 1, lr: float = 0.02, momentum: float = 0.0,
+                 weight_decay: float = 0.0,
+                 group_weights: Optional[Sequence[float]] = None,
+                 micro_sizes: Optional[Sequence[int]] = None,
+                 head_filter: Optional[Callable] = None,
+                 update_impl: str = "xla", interpret: Optional[bool] = None,
+                 exec_mode: str = "auto", num_devices: Optional[int] = None,
+                 donate: bool = True,
+                 sample_batches: Optional[Callable] = None,
+                 batch_size: Optional[int] = None, seed: int = 0,
+                 trace=None, replay_impl: str = "scan",
+                 replay_depth: Optional[int] = None,
+                 checkpoint_dir: str = "", checkpoint_every: int = 0,
+                 prefetch_depth: int = 2, telemetry_skip: int = 1):
+        if exec_mode not in ("auto", "spmd", "reference", "vmap"):
+            raise ValueError(f"unknown exec_mode {exec_mode!r}")
+        self.loss_fn = loss_fn
+        self.strategy: Strategy = get_strategy(strategy)
+        self.num_groups = int(num_groups)
+        if self.strategy.name == "sync" and self.num_groups != 1:
+            raise ValueError(f"strategy 'sync' is pinned to g=1, got "
+                             f"g={self.num_groups}; use grouped-fused/"
+                             "grouped-scan for g>1")
+        self.lr, self.momentum, self.weight_decay = lr, momentum, weight_decay
+        self.group_weights = (tuple(float(w) for w in group_weights)
+                              if group_weights is not None else None)
+        self.micro_sizes = (tuple(int(s) for s in micro_sizes)
+                            if micro_sizes is not None else None)
+        self.head_filter = head_filter
+        self.update_impl, self.interpret = update_impl, interpret
+        self.exec_mode, self.num_devices = exec_mode, num_devices
+        self.donate = donate
+        self.sample_batches, self.batch_size = sample_batches, batch_size
+        self.seed = seed
+        self.trace = trace
+        self.replay_impl, self.replay_depth = replay_impl, replay_depth
+        self.checkpoint_dir = checkpoint_dir
+        self.checkpoint_every = checkpoint_every
+        self.prefetch_depth = prefetch_depth
+        self.telemetry = timing.Telemetry(skip=telemetry_skip)
+        self._steps: dict = {}
+
+    # ------------------------------------------------------------------
+    # configuration resolution
+    # ------------------------------------------------------------------
+
+    def _weights_for(self, g: int):
+        if self.group_weights is not None and len(self.group_weights) == g:
+            return self.group_weights
+        return None
+
+    def _sizes_for(self, g: int):
+        if self.micro_sizes is not None and len(self.micro_sizes) == g:
+            return self.micro_sizes
+        return None
+
+    def _per_group_batch(self, g: int, global_batch: int) -> int:
+        sizes = self._sizes_for(g)
+        if sizes is not None:
+            return max(sizes)     # sized splits wrap-fill to max(sizes)
+        if global_batch % g:
+            raise ValueError(f"batch {global_batch} not divisible by g={g}")
+        return global_batch // g
+
+    def _resolve_exec(self, g: int, per_group_batch: int):
+        """-> (mode, k, mesh or None) for one g."""
+        n = self.num_devices if self.num_devices is not None \
+            else jax.device_count()
+        if self.exec_mode == "vmap":
+            return "vmap", 1, None
+        if self.exec_mode == "reference":
+            # runs on ONE device; n (num_devices= or the visible pool) only
+            # shapes the (g, k) shard structure being mirrored
+            return ("reference",
+                    choose_data_parallel(per_group_batch, max(1, n // g)),
+                    None)
+        k = choose_data_parallel(per_group_batch, n // g) if n >= g else 0
+        if self.exec_mode == "auto" and (n <= 1 or k < 1):
+            return "vmap", 1, None
+        if k < 1:
+            raise ValueError(f"exec_mode='spmd' needs >= {g} devices "
+                             f"(have {n})")
+        from repro.launch.mesh import make_group_mesh
+        return "spmd", k, make_group_mesh(g, k)
+
+    def _built_step(self, strategy: Strategy, *, g: int, lr: float,
+                    momentum: float, per_group_batch: int, donate: bool):
+        key = (strategy.name, g, lr, momentum, per_group_batch, donate)
+        step = self._steps.get(key)
+        if step is None:
+            step = strategy.build_step(self, g=g, lr=lr, momentum=momentum,
+                                       per_group_batch=per_group_batch,
+                                       donate=donate)
+            self._steps[key] = step
+        return step
+
+    def group_spec(self, g: Optional[int] = None) -> GroupSpec:
+        g = self.num_groups if g is None else g
+        n = self.num_devices if self.num_devices is not None \
+            else jax.device_count()
+        return GroupSpec(num_groups=g, num_devices=max(g, (n // g) * g))
+
+    def describe(self, g: Optional[int] = None,
+                 per_group_batch: Optional[int] = None) -> str:
+        g = self.num_groups if g is None else g
+        spec = self.group_spec(g)
+        mode, k, _ = self._resolve_exec(
+            g, per_group_batch if per_group_batch is not None
+            else max(1, spec.group_size))
+        return (f"engine[{self.strategy.name}] g={g} S={spec.staleness} "
+                f"mu_implicit={spec.implicit_momentum:.3f} "
+                f"exec={mode}" + (f"({g}x{k} mesh)" if mode == "spmd" else ""))
+
+    # ------------------------------------------------------------------
+    # per-round step
+    # ------------------------------------------------------------------
+
+    def step(self, params, mom, batch):
+        """One timed round on the global ``batch`` (leaves (B, ...)).
+        Returns ``(params, mom, loss)``; wall time lands in telemetry.
+
+        Never donates: the caller owns these buffers and may hold other
+        references. Donation is ``run``'s optimization — its loop owns the
+        rebinding (and copies the caller's initial arrays once)."""
+        if not self.strategy.supports_step:
+            raise ValueError(
+                f"strategy {self.strategy.name!r} has no per-round step; "
+                "use Engine.run")
+        b = jax.tree.leaves(batch)[0].shape[0]
+        built = self._built_step(
+            self.strategy, g=self.num_groups, lr=self.lr,
+            momentum=self.momentum,
+            per_group_batch=self._per_group_batch(self.num_groups, b),
+            donate=False)
+        t0 = timing.monotonic()
+        params, mom, loss = built(params, mom, batch)
+        jax.block_until_ready(loss)
+        self.telemetry.record(step_s=timing.monotonic() - t0)
+        return params, mom, loss
+
+    # ------------------------------------------------------------------
+    # whole runs
+    # ------------------------------------------------------------------
+
+    def run(self, params, mom, batches: Iterable, *, steps: int,
+            log_every: int = 0, log: Callable = print):
+        """Drive ``steps`` rounds from a per-step batch iterator with
+        prefetch, telemetry, and checkpoint hooks. For the trace-replay
+        strategy the iterator supplies one microbatch per trace commit.
+
+        Returns ``(params, mom, losses)`` (losses: Python floats).
+        """
+        if self.strategy.name == "trace-replay":
+            return self._run_replay(params, mom, batches, steps=steps,
+                                    log_every=log_every, log=log)
+        if self.donate:
+            # the loop's donated buffers must be the engine's own: copy the
+            # caller's initial params/momentum once so the first step's
+            # donation can't delete arrays the caller still holds
+            params = jax.tree.map(jnp.copy, params)
+            mom = jax.tree.map(jnp.copy, mom)
+        losses = []
+        t_prev = timing.monotonic()
+        for i, batch in enumerate(prefetch(iter(batches),
+                                           depth=self.prefetch_depth)):
+            if i >= steps:
+                break
+            t_ready = timing.monotonic()
+            b = jax.tree.leaves(batch)[0].shape[0]
+            built = self._built_step(
+                self.strategy, g=self.num_groups, lr=self.lr,
+                momentum=self.momentum,
+                per_group_batch=self._per_group_batch(self.num_groups, b),
+                donate=self.donate)
+            params, mom, loss = built(params, mom, batch)
+            losses.append(float(loss))          # syncs: step wall ends here
+            t_done = timing.monotonic()
+            self.telemetry.record(step_s=t_done - t_ready,
+                                  data_s=t_ready - t_prev)
+            t_prev = t_done
+            if log_every and i % log_every == 0:
+                log(f"step {i:5d} loss {losses[-1]:.4f} "
+                    f"({(t_done - t_ready) * 1e3:.0f} ms/it)")
+            self._maybe_checkpoint(i + 1, params, mom)
+        return params, mom, losses
+
+    def replay(self, params, batches, *, steps: Optional[int] = None):
+        """Execute the engine's trace along already-stacked ``batches``
+        (leaves (T, ...), one microbatch per commit). Returns
+        ``(final_params, losses (T,) ndarray)``; wall time lands in
+        telemetry. ``Engine.run`` wraps this for per-step iterators."""
+        trace = self.trace
+        if trace is None:
+            raise ValueError("strategy 'trace-replay' needs Engine(trace=...)")
+        if steps is not None:
+            trace = trace.truncate(steps)
+        if len(trace) == 0:
+            raise ValueError("trace has no commits to replay "
+                             f"(after truncation to {steps})")
+        t0 = timing.monotonic()
+        final, losses, _ = self.strategy.replay(self, params, batches,
+                                                trace=trace)
+        self.telemetry.record(step_s=timing.monotonic() - t0)
+        return final, np.asarray(losses)
+
+    def _run_replay(self, params, mom, batches, *, steps, log_every, log):
+        del mom     # replay owns its momentum state (zeros at trace start)
+        if self.trace is None:
+            raise ValueError("strategy 'trace-replay' needs Engine(trace=...)")
+        T = min(steps, len(self.trace))
+        if T == 0:
+            raise ValueError("trace has no commits to replay "
+                             f"(after truncation to {steps})")
+        collected = []
+        for i, batch in enumerate(batches):
+            if i >= T:
+                break
+            collected.append(batch)
+        if len(collected) < T:
+            raise ValueError(f"trace has {T} commits but the batch stream "
+                             f"ended after {len(collected)}")
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *collected)
+        final, losses = self.replay(params, stacked, steps=T)
+        dt = self.telemetry.step_s[-1]
+        if log_every:
+            for i in range(0, T, log_every):
+                log(f"commit {i:5d} loss {float(losses[i]):.4f}")
+            log(f"replayed {T} commits in {dt:.2f}s "
+                f"({dt / T * 1e3:.0f} ms/commit, impl={self.replay_impl})")
+        new_mom = jax.tree.map(jnp.zeros_like, params)
+        return final, new_mom, [float(x) for x in losses]
+
+    def _maybe_checkpoint(self, step_no: int, params, mom) -> None:
+        if not self.checkpoint_dir or not self.checkpoint_every:
+            return
+        if step_no % self.checkpoint_every:
+            return
+        from repro.checkpoint import checkpointing as CK   # lazy
+        CK.save(f"{self.checkpoint_dir}/ckpt_{step_no:07d}",
+                {"params": params, "mom": mom}, step=step_no)
+
+    # ------------------------------------------------------------------
+    # Algorithm-1 Runner protocol
+    # ------------------------------------------------------------------
+
+    def __call__(self, state, *, g: int, mu: float, eta: float, steps: int,
+                 probe: bool) -> Tuple[object, np.ndarray]:
+        """``Runner`` protocol (``core.auto_optimizer``): run ``steps`` at
+        (g, mu, eta) from ``state = (params, step_counter)``. Probe runs
+        restart from the same checkpoint and do not advance the stream key
+        schedule (paper App E-C)."""
+        if not self.strategy.supports_runner:
+            raise ValueError(
+                f"strategy {self.strategy.name!r} is not a Runner substrate")
+        if self.sample_batches is None or self.batch_size is None:
+            raise ValueError("the Runner protocol needs Engine("
+                             "sample_batches=..., batch_size=...)")
+        params, t0 = state
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed),
+                                 t0 + (1 if probe else 0))
+        batches = self.sample_batches(key, steps, self.batch_size)
+        final, losses = self.strategy.run_stacked(
+            self, params, batches, g=g, lr=eta, momentum=mu)
+        if probe:
+            return state, losses
+        return (final, t0 + steps), losses
+
+    # ------------------------------------------------------------------
+    # telemetry -> cluster calibration
+    # ------------------------------------------------------------------
+
+    def profile(self, params, mom, batch, *, warmup: int = 1,
+                iters: int = 5) -> float:
+        """Black-box examples/s of the engine's own jitted step (the
+        cluster subsystem's ``profile_device`` contract): the probe never
+        looks inside the step."""
+        from repro.cluster.devices import profile_device   # lazy
+        b = jax.tree.leaves(batch)[0].shape[0]
+        built = self._built_step(
+            self.strategy, g=self.num_groups, lr=self.lr,
+            momentum=self.momentum,
+            per_group_batch=self._per_group_batch(self.num_groups, b),
+            donate=False)
+        return profile_device(built, (params, mom, batch), batch_size=b,
+                              warmup=warmup, iters=iters)
+
+    def profiled_spec(self, spec, params, mom, batch, **kw):
+        """``DeviceSpec`` with its throughput measured from this engine."""
+        import dataclasses as _dc
+        return _dc.replace(spec,
+                           throughput=self.profile(params, mom, batch, **kw))

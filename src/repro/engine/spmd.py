@@ -1,0 +1,152 @@
+"""Mesh-sharded grouped step — the paper's compute groups as real SPMD.
+
+The mesh is a ``("group", "data")`` split of the device pool: g groups of
+k devices each (``launch.mesh.make_group_mesh``). The global batch is
+sharded over both axes, every device computes the gradient of its own
+microbatch shard, and the per-group gradient is the mean of the group's k
+shard gradients — synchronous data parallelism *within* a group, the
+round-robin staleness-0..g-1 grouped update *across* groups (applied
+replicated on every device, so parameters never diverge).
+
+Reproducibility contract (pinned by ``tests/test_engine.py``): the
+cross-device combination uses ``all_gather`` + a *local* mean on every
+device instead of ``psum``. A psum's reduction grouping is backend-chosen
+and does not bit-match a single-device reduction; gathering moves bits
+unchanged, and the local mean is then the very same reduction the
+single-device reference performs. The cost is an O(k) instead of
+O(log k) gradient exchange — at the CPU-test and small-cluster scales the
+engine targets, bitwise run-anywhere reproducibility is worth more than
+the bandwidth (the production dry-run path keeps its psum-based
+GSPMD lowering).
+
+``make_reference_grouped_step`` is the single-device twin: ``lax.map``
+over the same (g, k) shard structure — unbatched per-shard gradients in
+shard order, identical means, identical update — so the SPMD step must
+bit-match it leaf for leaf. (A vmap-batched gradient does NOT bit-match
+an unbatched one for all models — scatter-add ordering in embedding
+backward passes differs — which is why the reference maps over shards
+instead of vmapping them.)
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.async_sgd import apply_grouped_update, head_mask_tree
+
+
+def choose_data_parallel(per_group_batch: int, max_k: int) -> int:
+    """Largest within-group data-parallel width k <= max_k that divides the
+    per-group microbatch."""
+    if per_group_batch < 1 or max_k < 1:
+        return 1
+    for k in range(min(max_k, per_group_batch), 0, -1):
+        if per_group_batch % k == 0:
+            return k
+    return 1
+
+
+def device_batch_split(group_batch, k: int):
+    """(g, b, ...) leaves -> (g, k, b/k, ...): one shard per mesh device."""
+    def split(x):
+        g, b = x.shape[0], x.shape[1]
+        if b % k:
+            raise ValueError(f"per-group batch {b} not divisible by k={k}")
+        return x.reshape(g, k, b // k, *x.shape[2:])
+    return jax.tree.map(split, group_batch)
+
+
+def make_spmd_grouped_step(loss_fn: Callable, mesh: Mesh, *, lr: float,
+                           momentum: float, weight_decay: float = 0.0,
+                           strategy: str = "fused",
+                           head_filter: Optional[Callable] = None,
+                           group_weights: Optional[Sequence[float]] = None,
+                           update_impl: str = "xla",
+                           interpret: Optional[bool] = None):
+    """Build the mesh-sharded ``step(params, mom, device_batch)``.
+
+    ``device_batch`` leaves carry a leading (g, k, b/k) layout
+    (``device_batch_split``); params/momentum enter replicated and leave
+    replicated — the grouped update runs identically on every device from
+    the all-gathered (g, ...) gradient stack. Returns
+    ``(params, mom, losses)`` with ``losses`` the (g, k) per-shard loss
+    array — the scalar mean is taken on the host (deterministic float64)
+    so the reported loss bit-matches the reference path too, instead of
+    depending on how XLA fuses the final reduction.
+    """
+    g, k = mesh.shape["group"], mesh.shape["data"]
+
+    def step(params, mom_buf, dbatch):
+        head_mask = head_mask_tree(params, head_filter)
+
+        def shard_fn(p, v, bt):
+            local = jax.tree.map(lambda t: t[0, 0], bt)   # this device's shard
+            loss, grad = jax.value_and_grad(loss_fn)(p, local)
+            # within-group sync data parallelism: gather the group's k shard
+            # gradients (bit-exact data movement), mean locally
+            grad = jax.tree.map(
+                lambda t: jax.lax.all_gather(t, "data").mean(axis=0), grad)
+            # across groups: stack the g per-group gradients on every device
+            grad = jax.tree.map(
+                lambda t: jax.lax.all_gather(t, "group"), grad)
+            losses = jax.lax.all_gather(
+                jax.lax.all_gather(loss, "data"), "group")     # (g, k)
+            p, v = apply_grouped_update(
+                p, grad, v, strategy=strategy, lr=lr, momentum=momentum,
+                weight_decay=weight_decay, head_mask=head_mask,
+                group_weights=group_weights, update_impl=update_impl,
+                interpret=interpret)
+            return p, v, losses
+
+        return shard_map(
+            shard_fn, mesh=mesh, check_rep=False,
+            in_specs=(P(), P(), P("group", "data")),
+            out_specs=(P(), P(), P()))(params, mom_buf, dbatch)
+
+    step.mesh_shape = (g, k)
+    return step
+
+
+def make_reference_grouped_step(loss_fn: Callable, g: int, k: int, *,
+                                lr: float, momentum: float,
+                                weight_decay: float = 0.0,
+                                strategy: str = "fused",
+                                head_filter: Optional[Callable] = None,
+                                group_weights: Optional[Sequence[float]] = None,
+                                update_impl: str = "xla",
+                                interpret: Optional[bool] = None):
+    """Single-device reference of the SPMD step: the same (g, k) shard
+    structure executed sequentially (``lax.map`` over shards), the same
+    shard-mean and update. Bitwise target of ``make_spmd_grouped_step``.
+    """
+    def step(params, mom_buf, dbatch):
+        flat = jax.tree.map(
+            lambda t: t.reshape((g * k,) + t.shape[2:]), dbatch)
+        losses, grads = jax.lax.map(
+            lambda bt: jax.value_and_grad(loss_fn)(params, bt), flat)
+        grads = jax.tree.map(
+            lambda t: t.reshape((g, k) + t.shape[1:]).mean(axis=1), grads)
+        params_n, mom_n = apply_grouped_update(
+            params, grads, mom_buf, strategy=strategy, lr=lr,
+            momentum=momentum, weight_decay=weight_decay,
+            head_mask=head_mask_tree(params, head_filter),
+            group_weights=group_weights, update_impl=update_impl,
+            interpret=interpret)
+        return params_n, mom_n, losses.reshape(g, k)
+
+    step.mesh_shape = (g, k)
+    return step
+
+
+def group_mesh_devices(g: int, k: int):
+    """The first g*k local devices as a (g, k) array for mesh construction."""
+    devs = jax.devices()
+    if len(devs) < g * k:
+        raise ValueError(f"need {g * k} devices for a ({g},{k}) group mesh; "
+                         f"have {len(devs)} (set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N on CPU)")
+    return np.array(devs[:g * k]).reshape(g, k)

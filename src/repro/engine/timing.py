@@ -1,0 +1,84 @@
+"""Monotonic step timing + per-step telemetry.
+
+One clock for the whole repo: ``monotonic()`` (``time.perf_counter``) —
+the scattered ``time.time()`` spans the old drivers used were (a) not
+monotonic under clock adjustments and (b) wrapped the *whole* iteration,
+so host-side data generation and prefetch waits were billed to the device
+step. ``Telemetry`` separates the two: ``data_s`` is the time the loop
+spent waiting for the next batch, ``step_s`` the dispatch-to-sync time of
+the device step itself.
+
+The step-time stream is what the cluster subsystem calibrates from:
+``Telemetry.throughput()`` is the black-box examples/s measurement that
+``cluster.devices`` turns into a measured ``DeviceSpec`` (see
+``spec_from_telemetry``), closing the loop between the engine and the
+time-to-convergence planner.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Optional
+
+
+def monotonic() -> float:
+    """The repo's one wall-clock: monotonic, sub-microsecond resolution."""
+    return time.perf_counter()
+
+
+class Telemetry:
+    """Per-step wall-clock record of an engine run.
+
+    ``record(step_s, data_s)`` appends one step. The first ``skip`` steps
+    (default 1) are excluded from the aggregate statistics — they absorb
+    jit compilation, which the old one-span ``time.time()`` measurements
+    conflated with steady-state execution.
+    """
+
+    def __init__(self, skip: int = 1):
+        if skip < 0:
+            raise ValueError("skip must be >= 0")
+        self.skip = skip
+        self.step_s: List[float] = []
+        self.data_s: List[float] = []
+
+    def __len__(self) -> int:
+        return len(self.step_s)
+
+    def record(self, step_s: float, data_s: float = 0.0) -> None:
+        self.step_s.append(float(step_s))
+        self.data_s.append(float(data_s))
+
+    def _steady(self) -> List[float]:
+        return self.step_s[self.skip:] if len(self.step_s) > self.skip \
+            else self.step_s
+
+    def median_step_s(self) -> float:
+        steady = sorted(self._steady())
+        if not steady:
+            raise ValueError("no steps recorded")
+        return steady[len(steady) // 2]
+
+    def mean_step_s(self) -> float:
+        steady = self._steady()
+        if not steady:
+            raise ValueError("no steps recorded")
+        return sum(steady) / len(steady)
+
+    def throughput(self, batch_size: int) -> float:
+        """Black-box examples/s over the steady-state steps — the number
+        ``cluster.devices`` / the planner calibrate from."""
+        if batch_size < 1:
+            raise ValueError("batch_size must be >= 1")
+        return batch_size / self.median_step_s()
+
+    def summary(self, batch_size: Optional[int] = None) -> dict:
+        out = {
+            "steps": len(self.step_s),
+            "median_step_ms": self.median_step_s() * 1e3,
+            "mean_step_ms": self.mean_step_s() * 1e3,
+            "data_wait_ms": (sum(self.data_s[self.skip:])
+                             / max(1, len(self.data_s) - self.skip)) * 1e3,
+        }
+        if batch_size is not None:
+            out["examples_per_s"] = self.throughput(batch_size)
+        return out

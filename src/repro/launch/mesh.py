@@ -16,3 +16,16 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_test_mesh(data: int = 2, model: int = 2):
     """Small mesh for CPU tests (requires >= data*model host devices)."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_group_mesh(groups: int, data: int = 1):
+    """Compute-group mesh for the execution engine: (g, k) devices with
+    axes ("group", "data") — g async compute groups of k synchronous
+    data-parallel devices each (paper §IV-A). Uses the first g*k local
+    devices, so it works on any prefix of the host/TPU device pool
+    (CPU-testable via --xla_force_host_platform_device_count).
+    """
+    from jax.sharding import Mesh
+
+    from repro.engine.spmd import group_mesh_devices
+    return Mesh(group_mesh_devices(groups, data), ("group", "data"))

@@ -87,8 +87,9 @@ def make_train_step(cfg: ArchConfig, tc: TrainConfig, shape: InputShape,
     """Synchronous (g=1) data-parallel SGD-momentum step with optional
     gradient-accumulation microbatching. ``grad_shardings`` (same tree as
     params) pins the accumulator layout — without it GSPMD replicates the
-    fp32 accumulator per chip and all-reduces every microstep. For g>1 see
-    repro.core.async_sgd.make_grouped_train_step."""
+    fp32 accumulator per chip and all-reduces every microstep. For g>1 —
+    and for the whole training loop (prefetch, telemetry, donation) — see
+    the unified execution engine, ``repro.engine`` (docs/engine.md)."""
     window = effective_window(cfg, shape)
 
     def loss_fn(params, batch):

@@ -1,76 +1,95 @@
-"""End-to-end training driver.
+"""End-to-end training driver — argument parsing in front of the unified
+execution engine (``repro.engine``). The engine owns the loop: mesh-
+sharded grouped step (real SPMD over a ("group","data") device split when
+devices are available), strategy plugins, prefetch, donation, telemetry,
+checkpoint hooks, trace replay.
 
-CPU-runnable example (reduced arch, real data pipeline, Omnivore compute
-groups + Algorithm 1):
+CPU-runnable examples (reduced archs, real data pipeline, Omnivore
+compute groups + strategies):
 
+  # token LM, 4 async compute groups
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-7b --smoke \
       --steps 60 --groups 4 --momentum 0.3 --lr 0.05
 
-Heterogeneous planning (the cluster subsystem picks g, the device->group
-packing and throughput-proportional batch shares; the step then applies
-share-weighted grouped updates):
+  # the paper's own workload family: CNN with the merged-FC sync head
+  PYTHONPATH=src python -m repro.launch.train --arch lenet --smoke \
+      --steps 60 --groups 4 --momentum 0.3 --lr 0.05
 
-  PYTHONPATH=src python -m repro.launch.train --arch qwen2-7b --smoke \
-      --steps 20 --cluster-spec 8xgpu-g2.2xlarge,8xcpu-c4.4xlarge --plan
+  # 8 real host devices: XLA_FLAGS=--xla_force_host_platform_device_count=8
 
-On a real cluster the same driver runs the full config on the production
-mesh (--mesh prod[,multipod]).
+Heterogeneous planning (--cluster-spec ... --plan) picks g, the
+device->group packing and throughput-proportional batch shares; trace
+replay (--replay-trace trace.npz) executes along a recorded event
+schedule. Both run through the same Engine.
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-
-from repro.checkpoint import checkpointing as CK
 from repro.configs import get_config, get_smoke_config, list_archs
-from repro.core.async_sgd import make_grouped_train_step
-from repro.core.compute_groups import GroupSpec, group_batch_split
-from repro.data.pipeline import DataConfig, SyntheticLM, prefetch
+from repro.data.pipeline import DataConfig, SyntheticImages, SyntheticLM
+from repro.engine import Engine
+from repro.models import cnn as C
 from repro.models import transformer as T
 from repro.optim.sgd import init_momentum
 
 
-def _replay_main(args, cfg, params, loss_fn):
-    """--replay-trace: drive a smoke run along a recorded event trace —
-    the executed counterpart of the simulators' staleness predictions."""
-    from repro.exec import EventTrace, replay_trace
-
-    trace = EventTrace.load(args.replay_trace).truncate(args.steps)
-    T = len(trace)
-    if T == 0:
-        raise SystemExit(f"{args.replay_trace} has no commits to replay "
-                         f"(after truncation to --steps {args.steps})")
-    print(f"arch={cfg.name} replaying {args.replay_trace}: {T} commits, "
-          f"g={trace.num_groups}, mean staleness "
-          f"{float(trace.staleness.mean()):.2f}, max {trace.max_staleness}")
+def _build_workload(args):
+    """(name, params, loss_fn, data_iterable, head_filter) per --arch."""
+    if args.arch in C.CNN_CONFIGS:
+        cfg = C.get_cnn_smoke_config(args.arch) if args.smoke \
+            else C.get_cnn_config(args.arch)
+        params = C.init_params(jax.random.PRNGKey(args.seed), cfg)
+        data = SyntheticImages(DataConfig(
+            batch_size=args.batch, image_size=cfg.image_size,
+            channels=cfg.in_channels, num_classes=cfg.num_classes,
+            seed=args.seed))
+        return (cfg.name, params, lambda p, b: C.loss_fn(p, b, cfg),
+                data.batches(args.steps), C.head_filter, cfg)
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if cfg.arch_type in ("encdec", "vlm"):
+        raise SystemExit("train.py drives token-LM and CNN archs; see "
+                         "examples/ for the modality-stub variants")
+    params = T.init_params(jax.random.PRNGKey(args.seed), cfg)
     data = SyntheticLM(DataConfig(batch_size=args.batch, seq_len=args.seq,
                                   vocab_size=cfg.vocab_size, seed=args.seed))
-    # one microbatch per commit, stacked to a (T, ...) leading axis
-    batches = jax.tree.map(lambda *xs: jnp.stack(xs),
-                           *list(data.batches(T)))
-    t0 = time.time()
-    _, losses, _ = replay_trace(
-        loss_fn, params, batches, trace, lr=args.lr,
-        momentum=args.momentum, weight_decay=args.weight_decay,
-        impl=args.replay_impl,
-        depth=args.replay_depth or None)
-    losses = np.asarray(losses)
-    dt = time.time() - t0
-    for i in range(0, T, 10):
-        print(f"commit {i:5d} loss {float(losses[i]):.4f}")
-    print(f"final loss {losses[-5:].mean():.4f} "
-          f"({dt / T * 1e3:.0f} ms/commit, impl={args.replay_impl})")
-    return losses.tolist()
+    return (cfg.name, params, lambda p, b: T.lm_loss(p, b, cfg),
+            data.batches(args.steps), None, cfg)
+
+
+def _plan(args, params, cfg):
+    """Heterogeneous plan: g, device->group packing, batch shares."""
+    from repro import cluster
+    devices = cluster.parse_cluster_spec(args.cluster_spec)
+    n_params = sum(int(p.size) for p in jax.tree.leaves(params))
+    tokens = args.seq if hasattr(cfg, "vocab_size") else 1
+    # rough roofline: ~6*P FLOPs per token fwd+bwd, one param sweep of
+    # memory traffic per example, fp32 gradient payload
+    cost = cluster.WorkloadCost(flops_per_example=6.0 * n_params * tokens,
+                                bytes_per_example=4.0 * n_params,
+                                grad_bytes=4.0 * n_params)
+    # merged-FC phase ~ the head matmul on the full batch on the fastest
+    # device (unembed for LMs, the FC stack for CNNs)
+    if hasattr(cfg, "vocab_size"):
+        head_flops = 6.0 * cfg.d_model * cfg.vocab_size * args.seq
+    else:
+        head_flops = 6.0 * sum(int(np.prod(p["w"].shape))
+                               for p in params["fc"])
+    t_fc = args.batch * head_flops / max(d.peak_flops for d in devices)
+    plan = cluster.best_allocation(devices, global_batch=args.batch,
+                                   t_fc=t_fc, cost=cost)
+    print(plan.describe())
+    return plan
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=list_archs(), default="qwen2-7b")
+    ap.add_argument("--arch",
+                    choices=[*list_archs(), *sorted(C.CNN_CONFIGS)],
+                    default="qwen2-7b")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced same-family config (CPU-runnable)")
     ap.add_argument("--steps", type=int, default=50)
@@ -81,36 +100,36 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=0.02)
     ap.add_argument("--momentum", type=float, default=0.9)
     ap.add_argument("--weight-decay", type=float, default=0.0)
-    ap.add_argument("--strategy", choices=("fused", "scan"), default="fused",
-                    help="grouped update: closed-form fused pass (default) "
-                         "or the literal O(g) sequential scan reference")
+    ap.add_argument("--strategy",
+                    choices=("sync", "grouped-fused", "grouped-scan"),
+                    default="grouped-fused",
+                    help="engine strategy (sync is the g=1 reduction; "
+                         "--replay-trace switches to trace-replay)")
+    ap.add_argument("--exec-mode",
+                    choices=("auto", "spmd", "reference", "vmap"),
+                    default="auto",
+                    help="step placement: SPMD group mesh when devices "
+                         "allow (auto), forced mesh, the bit-exact "
+                         "single-device reference, or the legacy vmap path")
     ap.add_argument("--update-impl", choices=("xla", "pallas"), default="xla",
                     help="leaf kernel for the fused update (pallas runs "
                          "interpret-mode off-TPU)")
     ap.add_argument("--replay-trace", type=str, default="",
-                    help="replay a recorded event trace (.npz saved from "
-                         "queue_sim/cluster-sim EventTrace): executes one "
-                         "per-commit stale update per trace commit instead "
-                         "of the round-robin grouped step (truncated to "
+                    help="replay a recorded event trace (.npz EventTrace): "
+                         "one per-commit stale update per trace commit "
+                         "instead of round-robin rounds (truncated to "
                          "--steps commits)")
     ap.add_argument("--replay-impl", choices=("scan", "python", "fused"),
-                    default="scan",
-                    help="replay engine: jittable lax.scan (default), the "
-                         "Python reference, or the closed-form fused path "
-                         "(run-structured traces only)")
+                    default="scan")
     ap.add_argument("--replay-depth", type=int, default=0,
-                    help="cap the replay parameter-history ring; commits "
-                         "staler than the ring read its oldest version "
+                    help="cap the replay parameter-history ring "
                          "(0 = full max-staleness depth)")
     ap.add_argument("--cluster-spec", type=str, default="",
                     help="heterogeneous cluster, e.g. "
-                         "'8xgpu-g2.2xlarge,8xcpu-c4.4xlarge' "
-                         "(see repro.cluster.devices registry)")
+                         "'8xgpu-g2.2xlarge,8xcpu-c4.4xlarge'")
     ap.add_argument("--plan", action="store_true",
-                    help="run the time-to-convergence planner over "
-                         "--cluster-spec: picks g, packs devices into "
-                         "groups, splits the batch by throughput and "
-                         "weights the grouped updates accordingly "
+                    help="plan g / device packing / batch shares over "
+                         "--cluster-spec and train share-weighted "
                          "(overrides --groups)")
     ap.add_argument("--ckpt", type=str, default="")
     ap.add_argument("--seed", type=int, default=0)
@@ -118,76 +137,60 @@ def main(argv=None):
     if args.plan and not args.cluster_spec:
         ap.error("--plan requires --cluster-spec")
 
-    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    if cfg.arch_type in ("encdec", "vlm"):
-        raise SystemExit("train.py drives token-LM archs; see examples/ for "
-                         "the modality-stub variants")
-
-    params = T.init_params(jax.random.PRNGKey(args.seed), cfg)
+    name, params, loss_fn, data, head_filter, cfg = _build_workload(args)
     mom = init_momentum(params)
 
-    def loss_fn(p, batch):
-        return T.lm_loss(p, batch, cfg)
-
     if args.replay_trace:
-        return _replay_main(args, cfg, params, loss_fn)
+        if args.plan:
+            ap.error("--plan and --replay-trace are mutually exclusive "
+                     "(a replay executes a recorded schedule; there is "
+                     "nothing for the planner to allocate)")
+        from repro.exec import EventTrace
+        trace = EventTrace.load(args.replay_trace)
+        engine = Engine(loss_fn, strategy="trace-replay", trace=trace,
+                        lr=args.lr, momentum=args.momentum,
+                        weight_decay=args.weight_decay,
+                        replay_impl=args.replay_impl,
+                        replay_depth=args.replay_depth or None)
+        t = trace.truncate(args.steps)
+        if len(t) == 0:
+            raise SystemExit(f"{args.replay_trace} has no commits to replay "
+                             f"(after truncation to --steps {args.steps})")
+        print(f"arch={name} replaying {args.replay_trace}: {len(t)} commits, "
+              f"g={trace.num_groups}, mean staleness "
+              f"{float(t.staleness.mean()):.2f}, max {t.max_staleness}")
+        # one microbatch per commit: the per-commit stream uses batch-size
+        # microbatches, matching the per-group share of a grouped round
+        _, _, losses = engine.run(params, mom, data, steps=args.steps,
+                                  log_every=10)
+        print(f"final loss {np.mean(losses[-5:]):.4f} "
+              f"(impl={args.replay_impl})")
+        return losses
 
     groups, group_weights, micro_sizes = args.groups, None, None
     if args.plan:
-        from repro import cluster
-        devices = cluster.parse_cluster_spec(args.cluster_spec)
-        n_params = sum(int(p.size) for p in jax.tree.leaves(params))
-        # rough transformer roofline: ~6*P FLOPs per token fwd+bwd, one
-        # param sweep of memory traffic per example, fp32 gradient payload
-        cost = cluster.WorkloadCost(
-            flops_per_example=6.0 * n_params * args.seq,
-            bytes_per_example=4.0 * n_params,
-            grad_bytes=4.0 * n_params)
-        # merged-FC phase ~ the unembed matmul on the full batch, served by
-        # the fastest device in the cluster
-        head_flops = 6.0 * cfg.d_model * cfg.vocab_size * args.seq
-        t_fc = args.batch * head_flops / max(d.peak_flops for d in devices)
-        plan = cluster.best_allocation(devices, global_batch=args.batch,
-                                       t_fc=t_fc, cost=cost)
-        print(plan.describe())
-        groups = plan.g
-        group_weights = plan.weights
+        plan = _plan(args, params, cfg)
+        groups, group_weights = plan.g, plan.weights
         micro_sizes = plan.allocation.microbatches
 
-    # donate params/momentum: the fused update rewrites them in place
-    # instead of holding both generations live. The Pallas leaf kernel
-    # compiles natively on TPU and falls back to interpret mode elsewhere.
-    step = jax.jit(make_grouped_train_step(
-        loss_fn, num_groups=groups, lr=args.lr, momentum=args.momentum,
-        weight_decay=args.weight_decay, strategy=args.strategy,
-        update_impl=args.update_impl, group_weights=group_weights),
-        donate_argnums=(0, 1))
-
-    data = SyntheticLM(DataConfig(batch_size=args.batch, seq_len=args.seq,
-                                  vocab_size=cfg.vocab_size, seed=args.seed))
-    if args.plan:
-        spec = GroupSpec(num_groups=groups, num_devices=groups)
-        print(f"arch={cfg.name} g={groups} (planned) S={spec.staleness} "
-              f"mu_implicit={spec.implicit_momentum:.3f}")
-    else:
-        spec = GroupSpec(num_groups=groups,
-                         num_devices=max(groups, jax.device_count()))
-        print(f"arch={cfg.name} g={groups} S={spec.staleness} "
-              f"mu_implicit={spec.implicit_momentum:.3f}")
-
-    losses = []
-    t0 = time.time()
-    for i, batch in enumerate(prefetch(data.batches(args.steps))):
-        gb = group_batch_split(batch, groups, sizes=micro_sizes)
-        params, mom, loss = step(params, mom, gb)
-        losses.append(float(loss))
-        if i % 10 == 0:
-            print(f"step {i:5d} loss {losses[-1]:.4f} "
-                  f"({(time.time()-t0)/(i+1)*1e3:.0f} ms/it)")
+    engine = Engine(loss_fn, strategy=args.strategy, num_groups=groups,
+                    lr=args.lr, momentum=args.momentum,
+                    weight_decay=args.weight_decay,
+                    group_weights=group_weights, micro_sizes=micro_sizes,
+                    head_filter=head_filter, update_impl=args.update_impl,
+                    exec_mode=args.exec_mode,
+                    checkpoint_dir=args.ckpt,
+                    checkpoint_every=args.steps if args.ckpt else 0)
+    print(f"arch={name} {engine.describe(groups, args.batch // groups)}"
+          + (" (planned)" if args.plan else ""))
+    params, mom, losses = engine.run(params, mom, data, steps=args.steps,
+                                     log_every=10)
     print(f"final loss {np.mean(losses[-5:]):.4f}")
+    summary = engine.telemetry.summary(batch_size=args.batch)
+    print(f"telemetry: {summary['median_step_ms']:.1f} ms/step median, "
+          f"{summary['examples_per_s']:.0f} examples/s, "
+          f"{summary['data_wait_ms']:.1f} ms/step host data wait")
     if args.ckpt:
-        CK.save(f"{args.ckpt}/ckpt_{args.steps:07d}",
-                {"params": params, "mom": mom}, step=args.steps)
         print("checkpointed to", args.ckpt)
     return losses
 

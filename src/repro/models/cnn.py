@@ -55,6 +55,26 @@ CIFAR_NET = CNNConfig(
     fc_dims=(64,),
     source="Caffe CIFAR-10 tutorial (paper Fig. 8)")
 
+CNN_CONFIGS = {c.name: c for c in (LENET, CAFFENET, CIFAR_NET)}
+
+
+def get_cnn_config(name: str) -> CNNConfig:
+    try:
+        return CNN_CONFIGS[name]
+    except KeyError:
+        raise KeyError(f"unknown CNN arch {name!r}; "
+                       f"known: {sorted(CNN_CONFIGS)}") from None
+
+
+def get_cnn_smoke_config(name: str) -> CNNConfig:
+    """CPU-runnable reduced same-family config (the CNN counterpart of
+    ``configs.get_smoke_config``): shrink the image, keep the conv/FC
+    phase split so the merged-FC head semantics stay exercised."""
+    base = get_cnn_config(name)
+    return dataclasses.replace(
+        base, name=f"{base.name}-smoke", image_size=12, num_classes=4,
+        convs=(ConvSpec(8, 3, pool=2),), fc_dims=(16,))
+
 
 def _conv(x, w, b, stride, impl):
     if impl.startswith("lowering"):

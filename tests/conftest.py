@@ -1,0 +1,15 @@
+"""Tier-1 test session config.
+
+Force 8 host CPU devices BEFORE anything imports jax, so the engine's
+SPMD ("group", "data") mesh path is a first-class citizen of the default
+test run (the multi-device equivalence suite in test_engine.py needs g*k
+= 8 real XLA devices; test_dryrun_small already assumed the same count).
+An explicit --xla_force_host_platform_device_count in the environment
+wins.
+"""
+import os
+
+_FLAG = "--xla_force_host_platform_device_count"
+_flags = os.environ.get("XLA_FLAGS", "")
+if _FLAG not in _flags:
+    os.environ["XLA_FLAGS"] = f"{_flags} {_FLAG}=8".strip()

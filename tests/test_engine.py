@@ -1,0 +1,361 @@
+"""Unified execution engine: multi-device equivalence suite + plumbing.
+
+The core contract (ISSUE acceptance): the shard_map-based grouped step on
+8 forced host CPU devices BIT-matches the engine's single-device
+reference (lax.map over the same (g, k) shard structure) at g in
+{1, 2, 4}, for both update strategies, uniform and weighted
+group_weights. Plus: strategy plugins, the Algorithm-1 Runner protocol,
+trace replay through the engine, and telemetry feeding the cluster
+calibration path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.async_sgd import make_grouped_train_step
+from repro.core.auto_optimizer import algorithm1
+from repro.core.compute_groups import group_batch_split
+from repro.core.workload import (cnn_classify, init_state, make_runner,
+                                 mlp_classify)
+from repro.engine import Engine, choose_data_parallel, device_batch_split
+from repro.engine.timing import Telemetry
+
+needs8 = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs 8 host devices (tests/conftest.py forces them in tier-1)")
+
+
+def _tree_bits_equal(a, b):
+    return all(bool(jnp.all(x == y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def _run_pair(wl, *, strategy, g, weights=None, sizes=None, steps=3,
+              lr=0.05, momentum=0.6, weight_decay=0.0, batch=32):
+    """(spmd_state, reference_state) after ``steps`` engine rounds."""
+    params = wl.init(jax.random.PRNGKey(0))
+    mom = jax.tree.map(jnp.zeros_like, params)
+    batches = wl.sample_batches(jax.random.PRNGKey(1), steps, batch)
+    kw = dict(strategy=strategy, num_groups=g, lr=lr, momentum=momentum,
+              weight_decay=weight_decay, group_weights=weights,
+              micro_sizes=sizes, head_filter=wl.head_filter, donate=False)
+    e_spmd = Engine(wl.loss_fn, exec_mode="spmd", **kw)
+    e_ref = Engine(wl.loss_fn, exec_mode="reference", num_devices=8, **kw)
+    ps, ms = params, mom
+    pr, mr = params, mom
+    ls = lr_ = None
+    for t in range(steps):
+        b = jax.tree.map(lambda x: x[t], batches)
+        ps, ms, ls = e_spmd.step(ps, ms, b)
+        pr, mr, lr_ = e_ref.step(pr, mr, b)
+    return (ps, ms, ls), (pr, mr, lr_)
+
+
+@needs8
+@pytest.mark.parametrize("strategy", ["grouped-fused", "grouped-scan"])
+@pytest.mark.parametrize("g", [1, 2, 4])
+def test_spmd_bitmatches_reference_uniform(strategy, g):
+    """shard_map grouped step == lax.map single-device reference, bitwise,
+    uniform group weights (MLP workload)."""
+    wl = mlp_classify()
+    (ps, ms, ls), (pr, mr, lr_) = _run_pair(wl, strategy=strategy, g=g)
+    assert _tree_bits_equal(ps, pr), (strategy, g)
+    assert _tree_bits_equal(ms, mr), (strategy, g)
+    assert float(ls) == float(lr_), (strategy, g)
+
+
+@needs8
+@pytest.mark.parametrize("strategy", ["grouped-fused", "grouped-scan"])
+@pytest.mark.parametrize("g", [2, 4])
+def test_spmd_bitmatches_reference_weighted(strategy, g):
+    """Same, with unequal heterogeneous group weights (share-weighted
+    updates from a cluster allocation)."""
+    wl = mlp_classify()
+    weights = tuple(np.linspace(1.0, 2.0, g))
+    (ps, ms, ls), (pr, mr, lr_) = _run_pair(wl, strategy=strategy, g=g,
+                                            weights=weights)
+    assert _tree_bits_equal(ps, pr), (strategy, g)
+    assert _tree_bits_equal(ms, mr), (strategy, g)
+    assert float(ls) == float(lr_), (strategy, g)
+
+
+@needs8
+@pytest.mark.parametrize("strategy", ["grouped-fused", "grouped-scan"])
+def test_spmd_bitmatches_reference_cnn_head(strategy):
+    """The paper's CNN workload with the merged-FC head filter: head
+    params take the single averaged update, backbone the g stale updates —
+    identical on the mesh and the reference."""
+    wl = cnn_classify()
+    (ps, ms, ls), (pr, mr, lr_) = _run_pair(wl, strategy=strategy, g=4,
+                                            batch=16)
+    assert _tree_bits_equal(ps, pr), strategy
+    assert _tree_bits_equal(ms, mr), strategy
+    assert float(ls) == float(lr_)
+
+
+@needs8
+def test_spmd_bitmatches_reference_sized_microbatches():
+    """Ragged heterogeneous allocation: sized wrap-filled microbatches +
+    weights, still bitwise across spmd/reference."""
+    wl = mlp_classify()
+    (ps, ms, _), (pr, mr, _) = _run_pair(
+        wl, strategy="grouped-fused", g=2, weights=(0.625, 0.375),
+        sizes=(20, 12), batch=32)
+    assert _tree_bits_equal(ps, pr)
+    assert _tree_bits_equal(ms, mr)
+
+
+@needs8
+@pytest.mark.parametrize("strategy", ["grouped-fused", "grouped-scan"])
+def test_spmd_matches_reference_weight_decay_one_ulp(strategy):
+    """With weight decay the update's multiply-add may FMA-contract
+    differently between the two compiled programs (docs/engine.md):
+    everything else pinned bitwise above, this case is pinned to <= 1 ulp
+    of fp32."""
+    wl = mlp_classify()
+    (ps, _, _), (pr, _, _) = _run_pair(wl, strategy=strategy, g=2,
+                                       weight_decay=1e-4)
+    for a, b in zip(jax.tree.leaves(ps), jax.tree.leaves(pr)):
+        np.testing.assert_array_almost_equal_nulp(np.asarray(a),
+                                                  np.asarray(b), nulp=1)
+
+
+@needs8
+def test_spmd_bitmatches_reference_transformer():
+    """Model-agnosticism: the reduced token-LM through the same engine,
+    mesh vs reference, bitwise. (Transformer backward is exactly the case
+    where vmap-batched grads do NOT bit-match unbatched ones, which is
+    what the shard-structured reference exists for.)"""
+    from repro.configs import get_smoke_config
+    from repro.models import transformer as T
+
+    cfg = get_smoke_config("qwen2-7b")
+    class WL:
+        @staticmethod
+        def init(key):
+            return T.init_params(key, cfg)
+        @staticmethod
+        def loss_fn(p, b):
+            return T.lm_loss(p, b, cfg)
+        @staticmethod
+        def sample_batches(key, steps, batch):
+            k1, k2 = jax.random.split(key)
+            return {"tokens": jax.random.randint(
+                        k1, (steps, batch, 16), 0, cfg.vocab_size),
+                    "labels": jax.random.randint(
+                        k2, (steps, batch, 16), 0, cfg.vocab_size)}
+        head_filter = None
+
+    (ps, ms, ls), (pr, mr, lr_) = _run_pair(WL, strategy="grouped-fused",
+                                            g=2, steps=2, batch=8)
+    assert _tree_bits_equal(ps, pr)
+    assert _tree_bits_equal(ms, mr)
+    assert float(ls) == float(lr_)
+
+
+def test_vmap_mode_is_legacy_step():
+    """exec_mode="vmap" reproduces make_grouped_train_step exactly (it IS
+    the same step function behind the engine's batch preparation)."""
+    wl = mlp_classify()
+    params = wl.init(jax.random.PRNGKey(0))
+    mom = jax.tree.map(jnp.zeros_like, params)
+    batches = wl.sample_batches(jax.random.PRNGKey(1), 3, 32)
+    eng = Engine(wl.loss_fn, strategy="grouped-fused", num_groups=4, lr=0.05,
+                 momentum=0.9, exec_mode="vmap", donate=False)
+    legacy = jax.jit(make_grouped_train_step(wl.loss_fn, num_groups=4,
+                                             lr=0.05, momentum=0.9))
+    pe, me = params, mom
+    pl, ml = params, mom
+    for t in range(3):
+        b = jax.tree.map(lambda x: x[t], batches)
+        pe, me, le = eng.step(pe, me, b)
+        pl, ml, ll = legacy(pl, ml, group_batch_split(b, 4))
+    assert _tree_bits_equal(pe, pl)
+    assert _tree_bits_equal(me, ml)
+    np.testing.assert_allclose(float(le), float(ll), rtol=1e-6)
+
+
+def test_sync_strategy_pinned_to_g1():
+    wl = mlp_classify()
+    with pytest.raises(ValueError, match="pinned to g=1"):
+        Engine(wl.loss_fn, strategy="sync", num_groups=4)
+    runner = Engine(wl.loss_fn, strategy="sync",
+                    sample_batches=wl.sample_batches, batch_size=8)
+    with pytest.raises(ValueError, match="pinned to g=1"):
+        runner((wl.init(jax.random.PRNGKey(0)), 0), g=2, mu=0.0, eta=0.05,
+               steps=2, probe=True)
+    eng = Engine(wl.loss_fn, strategy="sync", num_groups=1, lr=0.05,
+                 momentum=0.6, donate=False)
+    params = wl.init(jax.random.PRNGKey(0))
+    mom = jax.tree.map(jnp.zeros_like, params)
+    batches = wl.sample_batches(jax.random.PRNGKey(1), 3, 32)
+    p = params
+    for t in range(3):
+        b = jax.tree.map(lambda x: x[t], batches)
+        p, mom, loss = eng.step(p, mom, b)
+    assert np.isfinite(float(loss))
+
+
+def test_engine_is_algorithm1_runner():
+    """make_runner returns an Engine; Algorithm 1 drives it end-to-end —
+    no per-caller training loop left between them."""
+    wl = mlp_classify()
+    runner = make_runner(wl, seed=0)
+    assert isinstance(runner, Engine)
+    state = init_state(wl, seed=0)
+    res = algorithm1(runner, state, n_devices=8, epochs=1, epoch_steps=40,
+                     probe_steps=15, g0=2)
+    assert res.losses[-10:].mean() < res.losses[:10].mean()
+
+
+def test_engine_runner_probe_semantics():
+    """Probe runs restart from the same checkpoint: state unchanged, same
+    key schedule as the historical closure-based runner."""
+    wl = mlp_classify()
+    runner = make_runner(wl, seed=0)
+    state = init_state(wl, seed=0)
+    s1, l1 = runner(state, g=2, mu=0.3, eta=0.05, steps=10, probe=True)
+    s2, l2 = runner(state, g=2, mu=0.3, eta=0.05, steps=10, probe=True)
+    assert s1 is state and s2 is state
+    np.testing.assert_array_equal(l1, l2)
+    s3, _ = runner(state, g=2, mu=0.3, eta=0.05, steps=10, probe=False)
+    assert s3[1] == 10
+
+
+def test_grouped_runner_strategy_trains():
+    """The deployable grouped step as the Runner substrate (the SPMD mesh
+    engages automatically when enough devices are visible)."""
+    wl = mlp_classify()
+    runner = make_runner(wl, seed=0, strategy="grouped-fused")
+    state = init_state(wl, seed=0)
+    (final, t0), losses = runner(state, g=4, mu=0.3, eta=0.05, steps=30,
+                                 probe=False)
+    assert t0 == 30
+    assert losses[-5:].mean() < losses[:5].mean()
+
+
+def test_trace_replay_strategy_matches_direct_replay():
+    """Engine(strategy="trace-replay") == repro.exec.replay_trace on the
+    same trace/batches — _replay_main's old body, now a strategy."""
+    from repro.core import queue_sim
+    from repro.exec import replay_trace
+
+    wl = mlp_classify()
+    params = wl.init(jax.random.PRNGKey(0))
+    T = 12
+    _, trace = queue_sim.simulate(g=3, t_conv=1.0, t_fc=0.05, iters=T,
+                                  exponential=True, seed=3, return_trace=True)
+    batches = wl.sample_batches(jax.random.PRNGKey(1), T, wl.batch_size)
+    eng = Engine(wl.loss_fn, strategy="trace-replay", trace=trace, lr=0.05,
+                 momentum=0.3, replay_impl="scan")
+    it = (jax.tree.map(lambda x: x[t], batches) for t in range(T))
+    pf, _, losses = eng.run(params, None, it, steps=T)
+    pf2, losses2, _ = replay_trace(wl.loss_fn, params, batches, trace,
+                                   lr=0.05, momentum=0.3, impl="scan")
+    assert _tree_bits_equal(pf, pf2)
+    np.testing.assert_allclose(losses, np.asarray(losses2), rtol=1e-6)
+
+
+def test_trace_replay_requires_trace_and_rejects_runner():
+    wl = mlp_classify()
+    eng = Engine(wl.loss_fn, strategy="trace-replay")
+    with pytest.raises(ValueError, match="trace"):
+        eng.run(wl.init(jax.random.PRNGKey(0)), None, iter([]), steps=4)
+    with pytest.raises(ValueError, match="Runner"):
+        eng((None, 0), g=1, mu=0.0, eta=0.1, steps=1, probe=True)
+
+
+def test_telemetry_feeds_cluster_calibration():
+    """Engine telemetry -> black-box DeviceSpec throughput (the planner
+    calibration path) without a separate probe run."""
+    from repro.cluster import DeviceSpec, spec_from_telemetry
+
+    wl = mlp_classify()
+    eng = Engine(wl.loss_fn, num_groups=2, lr=0.05, donate=False)
+    params = wl.init(jax.random.PRNGKey(0))
+    mom = jax.tree.map(jnp.zeros_like, params)
+    batches = wl.sample_batches(jax.random.PRNGKey(1), 4, 32)
+    it = (jax.tree.map(lambda x: x[t], batches) for t in range(4))
+    eng.run(params, mom, it, steps=4)
+    assert len(eng.telemetry) == 4
+    assert eng.telemetry.median_step_s() > 0
+    spec = spec_from_telemetry(
+        DeviceSpec("probe", "cpu", peak_flops=1e12, mem_bw=1e11,
+                   net_bw=1e9),
+        eng.telemetry, batch_size=32)
+    assert spec.throughput == eng.telemetry.throughput(32)
+    assert spec.predict_throughput() == spec.throughput
+    # profile(): the cluster probe contract against the engine's own step
+    b0 = jax.tree.map(lambda x: x[0], batches)
+    thr = eng.profile(params, mom, b0, warmup=1, iters=3)
+    assert thr > 0
+
+
+def test_telemetry_stats():
+    t = Telemetry(skip=1)
+    with pytest.raises(ValueError):
+        t.median_step_s()
+    for s in (5.0, 0.2, 0.4, 0.3):     # first (compile) step skipped
+        t.record(step_s=s, data_s=0.01)
+    assert t.median_step_s() == 0.3
+    assert abs(t.throughput(30) - 100.0) < 1e-9
+    s = t.summary(batch_size=30)
+    assert s["steps"] == 4 and "examples_per_s" in s
+
+
+def test_choose_data_parallel_and_device_split():
+    assert choose_data_parallel(16, 4) == 4
+    assert choose_data_parallel(10, 4) == 2   # largest divisor of 10 <= 4
+    assert choose_data_parallel(7, 4) == 1
+    assert choose_data_parallel(0, 4) == 1
+    gb = {"x": jnp.zeros((2, 6, 3))}
+    db = device_batch_split(gb, 2)
+    assert db["x"].shape == (2, 2, 3, 3)
+    with pytest.raises(ValueError, match="not divisible"):
+        device_batch_split(gb, 4)
+
+
+def test_reference_mode_needs_no_devices():
+    """The reference twin runs on one device regardless of the visible
+    pool — num_devices only shapes the (g, k) structure it mirrors."""
+    wl = mlp_classify()
+    eng = Engine(wl.loss_fn, num_groups=4, lr=0.05, exec_mode="reference",
+                 num_devices=1)
+    params = wl.init(jax.random.PRNGKey(0))
+    mom = jax.tree.map(jnp.zeros_like, params)
+    b = jax.tree.map(lambda x: x[0],
+                     wl.sample_batches(jax.random.PRNGKey(1), 1, 32))
+    _, _, loss = eng.step(params, mom, b)
+    assert np.isfinite(float(loss))
+    built = next(iter(eng._steps.values()))
+    assert built.mode == "reference" and built.k == 1
+
+
+def test_step_never_donates_caller_buffers():
+    """Engine.step must leave the caller's arrays alive even with the
+    engine's donating run-loop configuration (donate=True default)."""
+    wl = mlp_classify()
+    eng = Engine(wl.loss_fn, num_groups=2, lr=0.05)   # donate=True default
+    params = wl.init(jax.random.PRNGKey(0))
+    mom = jax.tree.map(jnp.zeros_like, params)
+    b = jax.tree.map(lambda x: x[0],
+                     wl.sample_batches(jax.random.PRNGKey(1), 1, 32))
+    eng.step(params, mom, b)
+    # original buffers still usable after the step
+    assert np.isfinite(float(wl.loss_fn(params, b)))
+    # and run() protects them too (copy-in before its donating loop)
+    it = (jax.tree.map(lambda x: x[t],
+                       wl.sample_batches(jax.random.PRNGKey(2), 3, 32))
+          for t in range(3))
+    eng.run(params, mom, it, steps=3)
+    assert np.isfinite(float(wl.loss_fn(params, b)))
+
+
+def test_engine_describe_and_spec():
+    wl = mlp_classify()
+    eng = Engine(wl.loss_fn, num_groups=4)
+    spec = eng.group_spec()
+    assert spec.staleness == 3
+    d = eng.describe(4, 8)
+    assert "g=4" in d and "S=3" in d
