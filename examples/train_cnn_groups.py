@@ -20,7 +20,7 @@ from repro.optim.sgd import init_momentum
 
 CFG = dataclasses.replace(cnn.LENET, image_size=12, num_classes=4,
                           convs=(cnn.ConvSpec(8, 3, pool=2),), fc_dims=(16,),
-                          conv_impl="lowering")   # paper §III path (XLA form)
+                          conv_impl="lowering")   # §III path, custom VJP
 
 
 def run(g, steps, mu_star_sync=0.9, lr=0.05, batch=16):

@@ -14,7 +14,6 @@ import dataclasses
 from typing import Iterator
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 
@@ -33,7 +32,16 @@ class DataConfig:
 
 class SyntheticLM:
     """Markov-chain token stream: next token depends on the current one, so
-    a model can actually reduce loss below uniform entropy."""
+    a model can actually reduce loss below uniform entropy.
+
+    Sampling is the inverse-CDF over cumulative transition rows,
+    precomputed once: row v of the cumulative matrix is offset by +v, so
+    the flattened array is globally sorted and one vectorized
+    ``searchsorted`` per timestep samples the whole batch (the old path
+    re-did a (local, V) gather + cumsum + compare-sum per timestep in
+    Python, which dominated small-step runs). Draws the same uniforms in
+    the same order as the old loop, so token streams are unchanged.
+    """
 
     def __init__(self, cfg: DataConfig, order_temp: float = 2.0):
         self.cfg = cfg
@@ -42,22 +50,31 @@ class SyntheticLM:
         logits = rng.normal(size=(min(v, 512), min(v, 512))) * order_temp
         self._trans = np.exp(logits) / np.exp(logits).sum(-1, keepdims=True)
         self._v_eff = min(v, 512)
+        cum = np.cumsum(self._trans, axis=-1)
+        cum[:, -1] = 1.0          # exact top: u in [0,1) can never overflow
+        self._cum_flat = (cum + np.arange(self._v_eff)[:, None]).ravel()
 
     def batches(self, steps: int) -> Iterator[dict]:
+        """Yields HOST numpy batches — ``prefetch`` owns the single
+        host->device transfer (see its docstring)."""
         cfg = self.cfg
         local = cfg.batch_size // cfg.host_count
+        v = self._v_eff
         rng = np.random.default_rng(
             (cfg.seed, cfg.host_index, 1))
         for _ in range(steps):
             toks = np.empty((local, cfg.seq_len + 1), dtype=np.int32)
-            toks[:, 0] = rng.integers(self._v_eff, size=local)
+            toks[:, 0] = rng.integers(v, size=local)
             for t in range(cfg.seq_len):
-                p = self._trans[toks[:, t]]
-                c = p.cumsum(axis=-1)
-                u = rng.random((local, 1))
-                toks[:, t + 1] = (u > c).sum(axis=-1)
-            yield {"tokens": jnp.asarray(toks[:, :-1]),
-                   "labels": jnp.asarray(toks[:, 1:])}
+                cur = toks[:, t]
+                u = rng.random(local)
+                nxt = np.searchsorted(self._cum_flat, cur + u) - cur * v
+                # clip both ends: u == 0.0 exactly lands on the previous
+                # row's terminal 1.0 (-> -1); float roundoff near 1 could
+                # land past the row (-> v)
+                toks[:, t + 1] = np.clip(nxt, 0, v - 1)
+            yield {"tokens": np.ascontiguousarray(toks[:, :-1]),
+                   "labels": np.ascontiguousarray(toks[:, 1:])}
 
 
 class SyntheticImages:
@@ -70,6 +87,7 @@ class SyntheticImages:
                                         cfg.image_size, cfg.channels))
 
     def batches(self, steps: int) -> Iterator[dict]:
+        """Yields HOST numpy batches (transfer belongs to ``prefetch``)."""
         cfg = self.cfg
         local = cfg.batch_size // cfg.host_count
         rng = np.random.default_rng((cfg.seed, cfg.host_index, 2))
@@ -77,12 +95,21 @@ class SyntheticImages:
             y = rng.integers(cfg.num_classes, size=local)
             x = self._protos[y] + 0.5 * rng.normal(
                 size=(local, cfg.image_size, cfg.image_size, cfg.channels))
-            yield {"images": jnp.asarray(x, jnp.float32),
-                   "labels": jnp.asarray(y, jnp.int32)}
+            yield {"images": x.astype(np.float32),
+                   "labels": y.astype(np.int32)}
 
 
 def prefetch(it: Iterator[dict], depth: int = 2) -> Iterator[dict]:
-    """Simple software pipeline (device put ahead of consumption)."""
+    """Software pipeline that owns the host->device transfer.
+
+    Contract (pinned by tests/test_hlo_and_substrate.py::
+    test_pipeline_host_to_device_contract): generators yield HOST
+    numpy batches and ``prefetch`` performs the one ``jax.device_put``,
+    ``depth`` batches ahead of consumption — so the transfer of batch
+    i+depth is in flight while the consumer computes on batch i. (The old
+    generators yielded ``jnp`` arrays, which made the ``device_put`` here
+    a no-op and the "prefetch" a plain buffer.)
+    """
     import collections
     buf = collections.deque()
     for batch in it:

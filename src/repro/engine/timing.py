@@ -16,13 +16,67 @@ time-to-convergence planner.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
-from typing import List, Optional
+from typing import Callable, List, Optional, Sequence
 
 
 def monotonic() -> float:
     """The repo's one wall-clock: monotonic, sub-microsecond resolution."""
     return time.perf_counter()
+
+
+@dataclasses.dataclass(frozen=True)
+class TimeStats:
+    """min + median + IQR of a repeated measurement. Median alone cannot
+    distinguish a real effect from noise on a shared-CPU box (the
+    non-monotonic g=2 vs g=4 rows in early BENCH_engine.json); min is the
+    noise-robust point estimate, IQR the spread certificate."""
+    min_s: float
+    median_s: float
+    iqr_s: float
+    iters: int
+
+    def row(self, scale: float = 1e6) -> dict:
+        """JSON-friendly dict (default unit: microseconds)."""
+        return {"min_us": self.min_s * scale,
+                "median_us": self.median_s * scale,
+                "iqr_us": self.iqr_s * scale,
+                "iters": self.iters}
+
+
+def stats_of(samples: Sequence[float]) -> TimeStats:
+    if not samples:
+        raise ValueError("no samples")
+    xs = sorted(samples)
+    n = len(xs)
+
+    def q(p: float) -> float:
+        # linear-interpolated quantile (numpy default), dependency-free
+        i = p * (n - 1)
+        lo = int(i)
+        hi = min(lo + 1, n - 1)
+        return xs[lo] + (i - lo) * (xs[hi] - xs[lo])
+
+    return TimeStats(min_s=xs[0], median_s=q(0.5), iqr_s=q(0.75) - q(0.25),
+                     iters=n)
+
+
+def probe(fn: Callable[[], object], *, warmup: int = 1,
+          iters: int = 5) -> TimeStats:
+    """Time ``fn()`` (blocking on its result) ``iters`` times after
+    ``warmup`` untimed calls that absorb jit compilation. The repo's one
+    measurement primitive: benchmarks/_timeit and the conv-tile autotuner
+    both delegate here."""
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    samples = []
+    for _ in range(iters):
+        t0 = monotonic()
+        jax.block_until_ready(fn())
+        samples.append(monotonic() - t0)
+    return stats_of(samples)
 
 
 class Telemetry:
@@ -63,6 +117,11 @@ class Telemetry:
         if not steady:
             raise ValueError("no steps recorded")
         return sum(steady) / len(steady)
+
+    def stats(self) -> TimeStats:
+        """min/median/IQR over the steady-state step times (``skip``
+        applied) — what the BENCH_*.json emitters record."""
+        return stats_of(self._steady())
 
     def throughput(self, batch_size: int) -> float:
         """Black-box examples/s over the steady-state steps — the number

@@ -6,7 +6,8 @@ across kv steps (the classic flash recurrence, TPU-style: blocks sized for
 VMEM, dots shaped for the 128x128 MXU).
 
 Sliding-window support doubles as the sub-quadratic path for the long_500k
-shape on dense architectures (DESIGN.md §5).
+input shape on dense architectures (``configs.base.INPUT_SHAPES``; the
+window policy lives in ``launch.steps.effective_window``).
 """
 from __future__ import annotations
 

@@ -1,4 +1,4 @@
-from repro.kernels.lowering_conv import ops, ref
+from repro.kernels.lowering_conv import autotune, bwd, ops, ref
 from repro.kernels.lowering_conv.lowering_conv import (choose_tiles,
                                                        largest_divisor,
                                                        lowering_conv_pallas,

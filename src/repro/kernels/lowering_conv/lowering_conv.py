@@ -1,5 +1,5 @@
 """Pallas TPU kernel: convolution by fused lowering + GEMM (paper §III
-adapted to TPU, DESIGN.md §3).
+adapted to TPU; design notes in docs/lowering_conv.md).
 
 The paper materializes the lowered matrix for the whole batch in DRAM and
 issues one big BLAS GEMM — trading memory footprint for GEMM efficiency,
@@ -47,9 +47,10 @@ def choose_tiles(b: int, ho: int, bp: int, rb: int) -> tuple:
     return largest_divisor(b, bp), largest_divisor(ho, rb)
 
 
-def _kernel(d_ref, k_ref, r_ref, *, kh, kw, stride, rb, wo):
-    ir = pl.program_id(1)
-    d = d_ref[...]                                 # (bp, H, W, Cin)
+def _lower_block(d, *, kh, kw, stride, rb, wo, ir):
+    """Lower one (bp, H, W, Cin) image block into the patch matrix for
+    output-row tile ``ir``: (bp*rb*wo, kh*kw*Cin). Shared by the forward
+    kernel and the wgrad kernel (docs/lowering_conv.md)."""
     bp, H, W, cin = d.shape
     rows_in = (rb - 1) * stride + kh
     d_rows = jax.lax.dynamic_slice(
@@ -63,19 +64,40 @@ def _kernel(d_ref, k_ref, r_ref, *, kh, kw, stride, rb, wo):
                                (1, stride, stride, 1))
             cols.append(sl)                        # (bp, rb, wo, cin)
     low = jnp.stack(cols, axis=3)                  # (bp, rb, wo, kh*kw, cin)
-    m = bp * rb * wo
-    d_hat = low.reshape(m, kh * kw * cin)
+    return low.reshape(bp * rb * wo, kh * kw * cin)
+
+
+def _kernel(d_ref, k_ref, r_ref, *, kh, kw, stride, rb, wo):
+    d_hat = _lower_block(d_ref[...], kh=kh, kw=kw, stride=stride, rb=rb,
+                         wo=wo, ir=pl.program_id(1))
     r = jnp.dot(d_hat, k_ref[...],                 # MXU GEMM
                 preferred_element_type=jnp.float32)
+    bp = d_ref.shape[0]
     r_ref[...] = r.reshape(bp, rb, wo, -1).astype(r_ref.dtype)
 
 
+def _kernel_with_lowered(d_ref, k_ref, r_ref, low_ref, *, kh, kw, stride, rb,
+                         wo):
+    d_hat = _lower_block(d_ref[...], kh=kh, kw=kw, stride=stride, rb=rb,
+                         wo=wo, ir=pl.program_id(1))
+    r = jnp.dot(d_hat, k_ref[...],
+                preferred_element_type=jnp.float32)
+    bp = d_ref.shape[0]
+    r_ref[...] = r.reshape(bp, rb, wo, -1).astype(r_ref.dtype)
+    low_ref[...] = d_hat.reshape(bp, rb, wo, kh * kw * d_ref.shape[3]) \
+                        .astype(low_ref.dtype)
+
+
 def lowering_conv_pallas(x: jax.Array, w: jax.Array, *, stride: int = 1,
-                         bp: int = 8, rb: int = 8,
-                         interpret: bool = False) -> jax.Array:
+                         bp: int = 8, rb: int = 8, interpret: bool = False,
+                         return_lowered: bool = False):
     """x: (B,H,W,Cin); w: (kh,kw,Cin,Cout); VALID padding.
 
     bp: images lowered per GEMM (paper's b_p); rb: output-row tile.
+    With ``return_lowered`` also emits the lowered patch matrix
+    (B, Ho, Wo, kh*kw*Cin) — the residual the custom-VJP backward reuses
+    (the paper's trade-memory-for-GEMM move applied to backprop: one extra
+    HBM tensor instead of re-lowering in the backward pass).
     """
     b, h, wdim, cin = x.shape
     kh, kw, _, cout = w.shape
@@ -85,27 +107,61 @@ def lowering_conv_pallas(x: jax.Array, w: jax.Array, *, stride: int = 1,
     k_hat = w.reshape(kh * kw * cin, cout)
 
     grid = (b // bp, ho // rb)
+    kern = _kernel_with_lowered if return_lowered else _kernel
+    out_specs = pl.BlockSpec((bp, rb, wo, cout), lambda ib, ir: (ib, ir, 0, 0))
+    out_shape = jax.ShapeDtypeStruct((b, ho, wo, cout), x.dtype)
+    if return_lowered:
+        out_specs = [out_specs,
+                     pl.BlockSpec((bp, rb, wo, kh * kw * cin),
+                                  lambda ib, ir: (ib, ir, 0, 0))]
+        out_shape = [out_shape,
+                     jax.ShapeDtypeStruct((b, ho, wo, kh * kw * cin), x.dtype)]
     return pl.pallas_call(
-        functools.partial(_kernel, kh=kh, kw=kw, stride=stride, rb=rb, wo=wo),
+        functools.partial(kern, kh=kh, kw=kw, stride=stride, rb=rb, wo=wo),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bp, h, wdim, cin), lambda ib, ir: (ib, 0, 0, 0)),
             pl.BlockSpec((kh * kw * cin, cout), lambda ib, ir: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((bp, rb, wo, cout),
-                               lambda ib, ir: (ib, ir, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, ho, wo, cout), x.dtype),
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(x, k_hat)
 
 
 def vmem_bytes(*, bp: int, rb: int, h: int, w: int, cin: int, kh: int, kw: int,
-               cout: int, stride: int = 1, itemsize: int = 4) -> int:
+               cout: int, stride: int = 1, itemsize: int = 4,
+               pass_: str = "fwd") -> int:
     """VMEM working set of one grid step — the TPU version of the paper's
-    Fig. 4(c) linear-in-b_p memory model."""
+    Fig. 4(c) linear-in-b_p memory model, extended to the backward kernels.
+
+    pass_:
+      "fwd"    image block + lowered tile + kernel matrix + output tile
+      "wgrad"  lowered-residual tile + dy tile + (K, Cout) accumulator
+               (``bwd.wgrad_pallas``: consumes the forward's lowered
+               residual, so no image block is resident)
+      "dgrad"  dy block + kernel matrix + dcols tile + dx image block
+               (``bwd.dgrad_pallas``: rb is ignored — the col2im scatter
+               needs all output rows of a batch block at once)
+    """
+    ho = (h - kh) // stride + 1
     wo = (w - kw) // stride + 1
-    img_block = bp * h * w * cin
-    lowered = bp * rb * wo * kh * kw * cin
-    kmat = kh * kw * cin * cout
-    out = bp * rb * wo * cout
-    return (img_block + lowered + kmat + out) * itemsize
+    K = kh * kw * cin
+    if pass_ == "fwd":
+        terms = (bp * h * w * cin,          # image block
+                 bp * rb * wo * K,          # lowered tile (registers/VMEM)
+                 K * cout,                  # kernel matrix
+                 bp * rb * wo * cout)       # output tile
+    elif pass_ == "wgrad":
+        terms = (bp * rb * wo * K,          # lowered-residual tile
+                 bp * rb * wo * cout,       # dy tile
+                 K * cout)                  # wgrad accumulator
+    elif pass_ == "dgrad":
+        terms = (bp * ho * wo * cout,       # dy block (all rows)
+                 K * cout,                  # kernel matrix
+                 bp * ho * wo * K,          # dcols tile
+                 bp * h * w * cin)          # dx image block
+    else:
+        raise ValueError(f"unknown pass_ {pass_!r} "
+                         "(expected fwd | wgrad | dgrad)")
+    return sum(terms) * itemsize

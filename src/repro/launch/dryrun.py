@@ -66,7 +66,8 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool,
         return {"arch": arch, "shape": shape_name,
                 "mesh": "2x16x16" if multi_pod else "16x16",
                 "status": "skipped",
-                "reason": "encdec has no 500k-token decode regime (DESIGN.md §5)"}
+                "reason": "encdec has no 500k-token decode regime "
+                          "(launch.steps.supports_shape)"}
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     chips = mesh.devices.size

@@ -27,8 +27,10 @@ def effective_window(cfg: ArchConfig, shape: InputShape) -> Optional[int]:
 
 
 def supports_shape(cfg: ArchConfig, shape: InputShape) -> bool:
-    """whisper-base: enc-dec over <=30s audio has no 500k-token decode regime
-    (DESIGN.md §5)."""
+    """whisper-base: enc-dec over <=30s audio has no 500k-token decode
+    regime (the long_500k shape in ``configs.base.INPUT_SHAPES`` is a
+    decode-regime shape; an encoder bounded to 30s of audio never sees
+    it)."""
     if cfg.arch_type == "encdec" and shape.name == "long_500k":
         return False
     return True

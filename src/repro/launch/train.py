@@ -40,8 +40,22 @@ from repro.optim.sgd import init_momentum
 def _build_workload(args):
     """(name, params, loss_fn, data_iterable, head_filter) per --arch."""
     if args.arch in C.CNN_CONFIGS:
+        import dataclasses
         cfg = C.get_cnn_smoke_config(args.arch) if args.smoke \
             else C.get_cnn_config(args.arch)
+        if args.conv_impl:
+            cfg = dataclasses.replace(cfg, conv_impl=args.conv_impl)
+        if cfg.conv_impl == "lowering_interpret":
+            # probe + cache (b_p, r_b) per conv layer before the engine
+            # compiles the step (paper Fig. 4 b_p sweep, automated).
+            # Probe at the per-group batch — the shape the engine actually
+            # traces each conv at (the cache key ignores the batch dim, so
+            # per-device shards still hit)
+            tiles = C.autotune_conv_tiles(cfg,
+                                          max(1, args.batch // args.groups))
+            print("autotuned conv tiles: " + ", ".join(
+                f"layer{i}(bp={bp},rb={rb})"
+                for i, (bp, rb) in sorted(tiles.items())))
         params = C.init_params(jax.random.PRNGKey(args.seed), cfg)
         data = SyntheticImages(DataConfig(
             batch_size=args.batch, image_size=cfg.image_size,
@@ -114,6 +128,16 @@ def main(argv=None):
     ap.add_argument("--update-impl", choices=("xla", "pallas"), default="xla",
                     help="leaf kernel for the fused update (pallas runs "
                          "interpret-mode off-TPU)")
+    ap.add_argument("--conv-impl",
+                    choices=("xla", "lowering", "lowering_interpret",
+                             "lowering_autodiff"),
+                    default="",
+                    help="CNN conv path (CNN archs only): lowering = "
+                         "custom-VJP batched-GEMM train path (config "
+                         "default), lowering_interpret = Pallas kernels "
+                         "with per-layer autotuned tiles, "
+                         "lowering_autodiff = generic-autodiff baseline, "
+                         "xla = native conv")
     ap.add_argument("--replay-trace", type=str, default="",
                     help="replay a recorded event trace (.npz EventTrace): "
                          "one per-commit stale update per trace commit "
@@ -136,6 +160,9 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if args.plan and not args.cluster_spec:
         ap.error("--plan requires --cluster-spec")
+    if args.conv_impl and args.arch not in C.CNN_CONFIGS:
+        ap.error(f"--conv-impl applies to CNN archs "
+                 f"({', '.join(sorted(C.CNN_CONFIGS))}), not {args.arch}")
 
     name, params, loss_fn, data, head_filter, cfg = _build_workload(args)
     mom = init_momentum(params)

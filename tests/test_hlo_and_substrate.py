@@ -117,3 +117,60 @@ def test_synthetic_images_and_prefetch():
     assert len(batches) == 3
     assert batches[0]["images"].shape == (4, 8, 8, 3)
     assert int(batches[0]["labels"].max()) < 3
+
+
+def test_synthetic_lm_searchsorted_matches_reference_loop():
+    """The vectorized inverse-CDF sampler (one searchsorted over the
+    offset-flattened cumulative rows per timestep) reproduces the old
+    per-timestep gather+cumsum+compare loop token for token."""
+    cfg = DataConfig(batch_size=8, seq_len=24, vocab_size=96, seed=11)
+    lm = SyntheticLM(cfg)
+    got = next(iter(lm.batches(1)))
+
+    # the seed repo's sampling loop, verbatim
+    local = cfg.batch_size
+    rng = np.random.default_rng((cfg.seed, cfg.host_index, 1))
+    toks = np.empty((local, cfg.seq_len + 1), dtype=np.int32)
+    toks[:, 0] = rng.integers(lm._v_eff, size=local)
+    for t in range(cfg.seq_len):
+        p = lm._trans[toks[:, t]]
+        c = p.cumsum(axis=-1)
+        u = rng.random((local, 1))
+        toks[:, t + 1] = (u > c).sum(axis=-1)
+    np.testing.assert_array_equal(got["tokens"], toks[:, :-1])
+    np.testing.assert_array_equal(got["labels"], toks[:, 1:])
+
+
+def test_pipeline_host_to_device_contract():
+    """Generators yield HOST numpy batches; ``prefetch`` performs the one
+    ``device_put``. (Before this was pinned, generators returned jnp
+    arrays and the device_put inside prefetch was a no-op.)"""
+    lm_cfg = DataConfig(batch_size=4, seq_len=8, vocab_size=32, seed=0)
+    im_cfg = DataConfig(batch_size=4, image_size=8, num_classes=3, seed=0)
+    for gen in (SyntheticLM(lm_cfg).batches(2),
+                SyntheticImages(im_cfg).batches(2)):
+        raw = next(iter(gen))
+        for leaf in raw.values():
+            assert isinstance(leaf, np.ndarray), type(leaf)
+            assert not isinstance(leaf, jax.Array)
+    for leaf in jax.tree.leaves(
+            next(iter(prefetch(SyntheticImages(im_cfg).batches(1))))):
+        assert isinstance(leaf, jax.Array)
+
+
+def test_prefetch_runs_ahead_of_consumption():
+    """depth batches are device_put before the consumer takes the first
+    one — the transfer overlap the pipeline exists for."""
+    puts = []
+
+    def gen():
+        for i in range(4):
+            puts.append(f"gen{i}")
+            yield {"x": np.full((2,), i, np.float32)}
+
+    it = prefetch(gen(), depth=2)
+    first = next(it)
+    # generator has been pulled depth+1 = 3 times before the first yield
+    assert puts == ["gen0", "gen1", "gen2"]
+    assert float(first["x"][0]) == 0.0
+    assert len(list(it)) == 3
