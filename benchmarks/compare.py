@@ -1,0 +1,231 @@
+"""Perf gate: compare fresh BENCH_*.json emissions against committed
+baselines and fail on regression — the four bench archives become an
+enforced perf trajectory instead of a passive record.
+
+Metric model: every ``TimeStats.row()`` dict (``{"min_us", "median_us",
+"iqr_us", "iters"}``) anywhere inside a bench JSON is one metric, named by
+its path; list entries are identified by their stable keys (g, arch,
+impl, batch, ...) rather than position, so reordering rows does not
+invent regressions.
+
+Gate rule (IQR-aware, per metric)::
+
+    fresh_min_us > base_min_us * (1 + tol) + max(base_iqr, fresh_iqr)
+
+``min_us`` is the noise-robust point estimate (see
+``engine.timing.TimeStats``); the IQR term widens the tolerance exactly
+where the measurement itself certifies spread, so a noisy shared-CPU box
+does not produce false alarms while a clean 2x regression on a quiet
+metric still trips the default 15%% threshold.
+
+Cross-machine mode (``--normalize``): CI compares baselines committed
+from one machine against fresh numbers from another. The median of
+per-metric ratios (fresh/base) over ALL shared metrics estimates the
+machine-speed factor, and each metric is judged on its ratio relative to
+that median. Blind spot (documented, accepted): a uniform slowdown of
+every metric reads as "slower machine" — the gate catches *relative*
+regressions, which is what a code change produces.
+
+Exit status: 0 = pass, 1 = regression (or a baseline metric disappeared,
+which would otherwise silently shrink coverage), 2 = usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+#: keys that identify a row inside a list (checked in order); values must
+#: be scalars. "bench"/"device_count" identify top-level sections.
+ID_KEYS = ("bench", "device_count", "g", "arch", "impl", "batch",
+           "bucket_bytes", "buckets", "mode", "name", "variant")
+
+STATS_KEYS = {"min_us", "median_us", "iqr_us"}
+
+
+def _ident(d: dict) -> str:
+    parts = [f"{k}={d[k]}" for k in ID_KEYS
+             if k in d and not isinstance(d[k], (dict, list))]
+    return ",".join(parts)
+
+
+def extract_metrics(node, prefix: str = "") -> dict:
+    """{metric_name: stats_row} for every TimeStats row in the document."""
+    out = {}
+    if isinstance(node, dict):
+        if STATS_KEYS <= set(node):
+            out[prefix or "root"] = node
+            return out
+        ident = _ident(node)
+        base = f"{prefix}[{ident}]" if ident else prefix
+        for key, val in node.items():
+            if isinstance(val, (dict, list)):
+                out.update(extract_metrics(
+                    val, f"{base}.{key}" if base else key))
+    elif isinstance(node, list):
+        for i, val in enumerate(node):
+            if isinstance(val, dict):
+                # identified rows name themselves (dict branch); only
+                # anonymous rows fall back to their (unstable) position
+                tag = "" if _ident(val) else f"[{i}]"
+                out.update(extract_metrics(val, f"{prefix}{tag}"))
+            elif isinstance(val, list):
+                out.update(extract_metrics(val, f"{prefix}[{i}]"))
+    return out
+
+
+def load_bench(path: Path) -> dict:
+    return extract_metrics(json.loads(path.read_text()))
+
+
+def compare_metrics(base: dict, fresh: dict, *, tol: float = 0.15,
+                    normalize: bool = False) -> dict:
+    """Compare shared metrics; returns a report dict (see keys below).
+
+    ``rows``: per-metric dicts with base/fresh min_us, ratio, the
+    IQR-aware threshold, and status in {"ok", "regression", "improved",
+    "new"}. ``missing``: baseline metrics absent from fresh (a failure —
+    coverage must not silently shrink). ``speed``: the machine-speed
+    normalization factor applied (1.0 unless ``normalize``).
+    """
+    shared = sorted(set(base) & set(fresh))
+    missing = sorted(set(base) - set(fresh))
+    new = sorted(set(fresh) - set(base))
+
+    speed = 1.0
+    if normalize and shared:
+        ratios = sorted(fresh[m]["min_us"] / base[m]["min_us"]
+                        for m in shared if base[m]["min_us"] > 0)
+        if ratios:
+            speed = ratios[len(ratios) // 2]
+
+    rows, regressions = [], 0
+    for m in shared:
+        b, f = base[m], fresh[m]
+        fresh_min = f["min_us"] / speed
+        iqr = max(b.get("iqr_us", 0.0), f.get("iqr_us", 0.0) / speed)
+        threshold = b["min_us"] * (1.0 + tol) + iqr
+        ratio = fresh_min / b["min_us"] if b["min_us"] > 0 else float("inf")
+        if fresh_min > threshold:
+            status = "regression"
+            regressions += 1
+        elif ratio < 1.0 / (1.0 + tol):
+            status = "improved"
+        else:
+            status = "ok"
+        rows.append({"metric": m, "base_min_us": b["min_us"],
+                     "fresh_min_us": f["min_us"],
+                     "normalized_min_us": fresh_min,
+                     "ratio": ratio, "threshold_us": threshold,
+                     "iqr_slack_us": iqr, "status": status})
+    for m in new:
+        rows.append({"metric": m, "base_min_us": None,
+                     "fresh_min_us": fresh[m]["min_us"],
+                     "normalized_min_us": fresh[m]["min_us"] / speed,
+                     "ratio": None, "threshold_us": None,
+                     "iqr_slack_us": None, "status": "new"})
+    return {"rows": rows, "missing": missing, "speed": speed,
+            "regressions": regressions, "shared": len(shared)}
+
+
+def markdown_table(name: str, report: dict, *, show_ok: bool = True) -> str:
+    lines = [f"### {name}",
+             "",
+             f"machine-speed factor: {report['speed']:.3f} | "
+             f"shared metrics: {report['shared']} | "
+             f"regressions: {report['regressions']}",
+             "",
+             "| metric | base min (us) | fresh min (us) | delta | status |",
+             "|---|---:|---:|---:|---|"]
+    for r in report["rows"]:
+        if not show_ok and r["status"] == "ok":
+            continue
+        delta = (f"{(r['ratio'] - 1) * 100:+.1f}%" if r["ratio"] is not None
+                 else "—")
+        base = (f"{r['base_min_us']:.1f}" if r["base_min_us"] is not None
+                else "—")
+        mark = {"regression": "**REGRESSION**", "improved": "improved",
+                "ok": "ok", "new": "new"}[r["status"]]
+        lines.append(f"| `{r['metric']}` | {base} | "
+                     f"{r['fresh_min_us']:.1f} | {delta} | {mark} |")
+    for m in report["missing"]:
+        lines.append(f"| `{m}` | — | — | — | **MISSING** |")
+    lines.append("")
+    return "\n".join(lines)
+
+
+def compare_dirs(base_dir: Path, fresh_dir: Path, *, tol: float,
+                 normalize: bool, benches=None):
+    """Compare every BENCH_*.json present in ``base_dir`` against its twin
+    in ``fresh_dir``. Returns (ok, per-file reports, markdown)."""
+    files = sorted(base_dir.glob("BENCH_*.json"))
+    if benches:
+        want = {f"BENCH_{b}.json" for b in benches}
+        files = [f for f in files if f.name in want]
+    if not files:
+        raise FileNotFoundError(f"no BENCH_*.json baselines in {base_dir}")
+    ok, reports, md = True, {}, []
+    for f in files:
+        twin = fresh_dir / f.name
+        if not twin.exists():
+            ok = False
+            reports[f.name] = {"error": "fresh file missing"}
+            md.append(f"### {f.name}\n\n**MISSING fresh emission** — the "
+                      "bench did not run or crashed.\n")
+            continue
+        rep = compare_metrics(load_bench(f), load_bench(twin), tol=tol,
+                              normalize=normalize)
+        reports[f.name] = rep
+        md.append(markdown_table(f.name, rep))
+        if rep["regressions"] or rep["missing"]:
+            ok = False
+    return ok, reports, "\n".join(md)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline", type=Path,
+                    help="directory holding the committed BENCH_*.json")
+    ap.add_argument("fresh", type=Path,
+                    help="directory holding the freshly emitted BENCH_*.json")
+    ap.add_argument("--tol", type=float, default=0.15,
+                    help="relative min_us regression tolerance "
+                         "(default 0.15; IQR slack is added on top)")
+    ap.add_argument("--normalize", action="store_true",
+                    help="divide fresh timings by the median fresh/base "
+                         "ratio (cross-machine CI mode)")
+    ap.add_argument("--benches", type=str, default="",
+                    help="comma-separated bench names (default: every "
+                         "baseline file)")
+    ap.add_argument("--markdown", type=Path, default=None,
+                    help="write the per-bench delta table here "
+                         "(e.g. $GITHUB_STEP_SUMMARY)")
+    args = ap.parse_args(argv)
+
+    try:
+        ok, reports, md = compare_dirs(
+            args.baseline, args.fresh, tol=args.tol,
+            normalize=args.normalize,
+            benches=[b for b in args.benches.split(",") if b])
+    except FileNotFoundError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+    print(md)
+    if args.markdown:
+        with open(args.markdown, "a") as fh:
+            fh.write(md + "\n")
+    for name, rep in reports.items():
+        if "error" in rep:
+            print(f"FAIL {name}: {rep['error']}")
+        elif rep["regressions"] or rep["missing"]:
+            print(f"FAIL {name}: {rep['regressions']} regression(s), "
+                  f"{len(rep['missing'])} missing metric(s)")
+        else:
+            print(f"PASS {name}: {rep['shared']} metrics within tolerance")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

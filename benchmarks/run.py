@@ -402,12 +402,23 @@ def bench_planner():
 def _engine_probe(gs=(1, 2, 4, 8)):
     """Child-process half of ``bench_engine``: time the unified engine's
     grouped step per g at whatever device count XLA_FLAGS forced, print one
-    JSON line. Run via ``python benchmarks/run.py --engine-probe``."""
+    JSON line. Run via ``python benchmarks/run.py --engine-probe``.
+
+    With >= 8 devices the probe also runs the overlapped-exchange
+    head-to-head: the bucketed SPMD step (``engine.buckets``) vs the
+    legacy whole-tree-gather arm (``bucket_bytes=0``), interleaved
+    round-robin at g in {2, 4}, with one row per bucket count (the
+    ``bucket_bytes`` sweep covers per-leaf / packed / single-slab)."""
     from repro.core.workload import mlp_classify
     from repro.engine import Engine
+    from repro.engine.buckets import assign_buckets
+    from repro.engine.spmd import (DEFAULT_BUCKET_BYTES, device_batch_split,
+                                   make_spmd_grouped_step)
+    from repro.launch.mesh import make_group_mesh
 
     wl = mlp_classify(batch_size=64)
     params = wl.init(jax.random.PRNGKey(0))
+    leaves = jax.tree.leaves(params)
     batch = jax.tree.map(lambda x: x[0],
                          wl.sample_batches(jax.random.PRNGKey(1), 1, 64))
     rows = []
@@ -418,16 +429,55 @@ def _engine_probe(gs=(1, 2, 4, 8)):
         for _ in range(12):          # telemetry skips the compile step
             p, m, _ = eng.step(p, m, batch)
         built = next(iter(eng._steps.values()))
+        nb = (len(assign_buckets(leaves, [False] * len(leaves),
+                                 eng.bucket_bytes))
+              if built.mode == "spmd" else 0)
         rows.append({"g": g, "mode": built.mode, "k": built.k,
+                     "buckets": nb,
                      "step_us": eng.telemetry.median_step_s() * 1e6,
                      "step": eng.telemetry.stats().row()})
-    print(json.dumps({"device_count": jax.device_count(), "rows": rows}))
+
+    overlap = []
+    if jax.device_count() >= 8:
+        mom = jax.tree.map(jnp.zeros_like, params)
+        # bucket_bytes sweep: per-leaf buckets (1), small packed buckets
+        # (600 B), one slab (default); 0 = whole-tree baseline arm
+        sweep = (0, 1, 600, DEFAULT_BUCKET_BYTES)
+        for g in (2, 4):
+            k = 8 // g
+            mesh = make_group_mesh(g, k)
+            gb = jax.tree.map(
+                lambda t: t.reshape((g, t.shape[0] // g) + t.shape[1:]),
+                batch)
+            db = device_batch_split(gb, k)
+            thunks, nbuckets = {}, {}
+            for bb in sweep:
+                fn = jax.jit(make_spmd_grouped_step(
+                    wl.loss_fn, mesh, lr=0.05, momentum=0.9,
+                    bucket_bytes=bb))
+                thunks[bb] = (lambda fn=fn: fn(params, mom, db))
+                nbuckets[bb] = (len(assign_buckets(
+                    leaves, [False] * len(leaves), bb)) if bb > 0 else 0)
+            stats = _timeit_interleaved(thunks, warmup=2, iters=15)
+            base = stats[0]            # whole-tree arm
+            for bb in sweep:
+                s = stats[bb]
+                overlap.append({
+                    "g": g, "k": k, "bucket_bytes": bb,
+                    "buckets": nbuckets[bb],
+                    "variant": "wholetree" if bb == 0 else "bucketed",
+                    "step": s.row(),
+                    "speedup_vs_wholetree_min": base.min_s / s.min_s})
+    print(json.dumps({"device_count": jax.device_count(), "rows": rows,
+                      "overlap": overlap}))
 
 
 def bench_engine():
     """Unified-engine grouped step: wall time per g on 1 vs 8 forced host
     CPU devices (the SPMD ("group","data") mesh vs the single-device
-    path). Emits BENCH_engine.json for cross-PR perf tracking. Each device
+    path), plus the overlapped bucketed exchange vs whole-tree gather
+    head-to-head on the 8-device lane. Emits BENCH_engine.json for
+    cross-PR perf tracking (gated by benchmarks/compare.py). Each device
     count needs its own XLA runtime, so the probes run as child
     processes."""
     import subprocess
@@ -451,12 +501,20 @@ def bench_engine():
         for row in data["rows"]:
             _row(f"engine_d{data['device_count']}_g{row['g']}",
                  row["step_us"], f"mode={row['mode']};k={row['k']}")
+        for row in data.get("overlap", []):
+            _row(f"engine_overlap_g{row['g']}_bb{row['bucket_bytes']}",
+                 row["step"]["median_us"],
+                 f"buckets={row['buckets']};"
+                 f"speedup_vs_wholetree="
+                 f"{row['speedup_vs_wholetree_min']:.2f}x")
 
     out = {"bench": "engine", "workload": "mlp_classify(batch=64)",
            "strategy": "grouped-fused",
            "timeit": {"steps": 12, "stat": "min+median+iqr per row "
                                            "('step'); legacy step_us is "
-                                           "the median", "skip": 1},
+                                           "the median", "skip": 1,
+                      "overlap": "interleaved round-robin, warmup=2, "
+                                 "iters=15; speedups from min"},
            "device_counts": [r["device_count"] for r in results],
            "runs": results}
     (ROOT / "BENCH_engine.json").write_text(json.dumps(out, indent=2))

@@ -1,7 +1,9 @@
 """Unified mesh-sharded execution engine: one ``Engine`` behind train /
 Algorithm 1 / replay, with real SPMD compute groups (see docs/engine.md)."""
+from repro.engine.buckets import Bucket, assign_buckets
 from repro.engine.engine import Engine
-from repro.engine.spmd import (choose_data_parallel, device_batch_split,
+from repro.engine.spmd import (DEFAULT_BUCKET_BYTES, StrandedDevicesWarning,
+                               choose_data_parallel, device_batch_split,
                                make_reference_grouped_step,
                                make_spmd_grouped_step)
 from repro.engine.strategies import get_strategy, list_strategies

@@ -1,0 +1,125 @@
+"""Gradient bucketing for the overlapped SPMD grouped step.
+
+The whole-tree step gathers every leaf only after the *entire* backward
+pass has produced the full gradient tree, so the gradient exchange and
+the backward compute serialize — exactly the HE (hardware-efficiency)
+loss the paper's throughput model assumes away. Bucketing cuts the tree
+into a handful of flat slabs so each slab's ``all_gather("data")`` +
+``all_gather("group")`` depends only on *its own* leaves: XLA's async
+collective pair (`all-gather-start`/`-done`) for an early bucket can run
+while the remaining backward compute is still producing later buckets.
+
+Assignment is static (shapes/dtypes only, computed at trace time):
+
+- leaves are packed in **reverse flatten order**, matching the order
+  reverse-mode AD produces gradients (output-side layers first), so the
+  first bucket closes as early in the backward pass as possible;
+- a bucket only holds leaves of one (dtype, is_head) class — mixed
+  dtypes cannot share a slab without bit-changing casts, and head
+  (merged-FC) leaves take different update coefficients;
+- buckets close when they reach ``bucket_bytes`` (a target, not a hard
+  cap: a single leaf larger than the target still forms one bucket).
+
+Bitwise contract: packing is ``concatenate(ravel(leaf) ...)`` — pure
+data movement — and gather/mean on a slab performs the same ascending-k
+per-element reduction as the per-leaf gathers it replaces, so the
+bucketed step stays bit-identical to ``make_reference_grouped_step``
+(pinned by tests/test_engine.py across bucket sizes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    """One slab: a run of leaves (flat-tree indices) sharing dtype and
+    head-ness, packed into a single 1-D gather unit."""
+    indices: Tuple[int, ...]          # jax.tree.flatten leaf indices
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtype: str                        # canonical dtype name, hashable
+    is_head: bool
+
+    @property
+    def sizes(self) -> Tuple[int, ...]:
+        return tuple(int(np.prod(s, dtype=np.int64)) for s in self.shapes)
+
+    @property
+    def num_elements(self) -> int:
+        return sum(self.sizes)
+
+    @property
+    def nbytes(self) -> int:
+        return self.num_elements * jnp.dtype(self.dtype).itemsize
+
+
+def assign_buckets(leaves: Sequence, head_flags: Sequence[bool],
+                   bucket_bytes: int) -> Tuple[Bucket, ...]:
+    """Static bucket assignment over flat leaves (arrays or avals).
+
+    ``leaves``: the flattened parameter/gradient leaves (only ``.shape``
+    and ``.dtype`` are read, so tracers and ShapeDtypeStructs work).
+    ``head_flags``: parallel flat list of merged-FC head markers.
+    ``bucket_bytes``: per-bucket size target; must be > 0 (the caller
+    owns the ``bucket_bytes <= 0`` whole-tree arm).
+    """
+    if bucket_bytes <= 0:
+        raise ValueError(f"bucket_bytes must be > 0, got {bucket_bytes}")
+    if len(leaves) != len(head_flags):
+        raise ValueError(f"{len(leaves)} leaves vs {len(head_flags)} "
+                         "head flags")
+    buckets: List[Bucket] = []
+    cur_idx: List[int] = []
+    cur_shapes: List[Tuple[int, ...]] = []
+    cur_key = None          # (dtype_name, is_head)
+    cur_bytes = 0
+
+    def close():
+        nonlocal cur_idx, cur_shapes, cur_bytes
+        if cur_idx:
+            buckets.append(Bucket(indices=tuple(cur_idx),
+                                  shapes=tuple(cur_shapes),
+                                  dtype=cur_key[0], is_head=cur_key[1]))
+        cur_idx, cur_shapes, cur_bytes = [], [], 0
+
+    # reverse flatten order = backward production order (see module doc)
+    for i in reversed(range(len(leaves))):
+        leaf = leaves[i]
+        key = (jnp.dtype(leaf.dtype).name, bool(head_flags[i]))
+        nbytes = int(np.prod(leaf.shape, dtype=np.int64)) \
+            * jnp.dtype(leaf.dtype).itemsize
+        if cur_key != key or (cur_idx and cur_bytes + nbytes > bucket_bytes):
+            close()
+            cur_key = key
+        cur_idx.append(i)
+        cur_shapes.append(tuple(int(d) for d in leaf.shape))
+        cur_bytes += nbytes
+    close()
+    return tuple(buckets)
+
+
+def pack_bucket(bucket: Bucket, flat_leaves: Sequence) -> jax.Array:
+    """Concatenate the bucket's leaves (raveled) into one (n,) slab —
+    pure data movement, no arithmetic."""
+    parts = [flat_leaves[i].reshape(-1) for i in bucket.indices]
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+
+
+def unpack_bucket(bucket: Bucket, slab: jax.Array) -> List[jax.Array]:
+    """Split an updated slab back into leaf arrays, in ``bucket.indices``
+    order. ``slab`` is (n,) or (g, n) — leading axes are preserved, so a
+    gathered (g, n) slab unpacks to per-leaf (g, *shape) stacks."""
+    lead = slab.shape[:-1]
+    out, off = [], 0
+    for shape, size in zip(bucket.shapes, bucket.sizes):
+        out.append(slab[..., off:off + size].reshape(lead + shape))
+        off += size
+    if off != slab.shape[-1]:
+        raise ValueError(f"slab has {slab.shape[-1]} elements, bucket "
+                         f"expects {off}")
+    return out

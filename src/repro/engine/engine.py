@@ -33,7 +33,7 @@ import numpy as np
 from repro.core.compute_groups import GroupSpec
 from repro.data.pipeline import prefetch
 from repro.engine import timing
-from repro.engine.spmd import choose_data_parallel
+from repro.engine.spmd import DEFAULT_BUCKET_BYTES, choose_data_parallel
 from repro.engine.strategies import Strategy, get_strategy
 
 
@@ -56,6 +56,10 @@ class Engine:
     ``sample_batches(key, steps, batch_size)`` + ``batch_size`` enable the
     Runner protocol (Algorithm 1). ``trace`` + strategy "trace-replay"
     switch ``run`` to executing along the recorded event schedule.
+
+    ``bucket_bytes`` sets the slab size target of the SPMD step's
+    overlapped bucketed gradient exchange (``engine.spmd``; 0 restores
+    the legacy whole-tree gather).
     """
 
     def __init__(self, loss_fn: Callable, *, strategy: str = "grouped-fused",
@@ -67,6 +71,7 @@ class Engine:
                  update_impl: str = "xla", interpret: Optional[bool] = None,
                  exec_mode: str = "auto", num_devices: Optional[int] = None,
                  donate: bool = True,
+                 bucket_bytes: int = DEFAULT_BUCKET_BYTES,
                  sample_batches: Optional[Callable] = None,
                  batch_size: Optional[int] = None, seed: int = 0,
                  trace=None, replay_impl: str = "scan",
@@ -91,6 +96,7 @@ class Engine:
         self.update_impl, self.interpret = update_impl, interpret
         self.exec_mode, self.num_devices = exec_mode, num_devices
         self.donate = donate
+        self.bucket_bytes = int(bucket_bytes)
         self.sample_batches, self.batch_size = sample_batches, batch_size
         self.seed = seed
         self.trace = trace
@@ -131,9 +137,11 @@ class Engine:
             return "vmap", 1, None
         if self.exec_mode == "reference":
             # runs on ONE device; n (num_devices= or the visible pool) only
-            # shapes the (g, k) shard structure being mirrored
+            # shapes the (g, k) shard structure being mirrored — stranding
+            # is not a real-hardware concern here, so no warning
             return ("reference",
-                    choose_data_parallel(per_group_batch, max(1, n // g)),
+                    choose_data_parallel(per_group_batch, max(1, n // g),
+                                         warn=False),
                     None)
         k = choose_data_parallel(per_group_batch, n // g) if n >= g else 0
         if self.exec_mode == "auto" and (n <= 1 or k < 1):
@@ -141,17 +149,26 @@ class Engine:
         if k < 1:
             raise ValueError(f"exec_mode='spmd' needs >= {g} devices "
                              f"(have {n})")
+        if k < n // g:
+            self.telemetry.note(
+                f"stranded devices: g={g} uses k={k} of {n // g} "
+                f"per-group device slots (per-group batch "
+                f"{per_group_batch} has no larger divisor)")
         from repro.launch.mesh import make_group_mesh
         return "spmd", k, make_group_mesh(g, k)
 
     def _built_step(self, strategy: Strategy, *, g: int, lr: float,
-                    momentum: float, per_group_batch: int, donate: bool):
-        key = (strategy.name, g, lr, momentum, per_group_batch, donate)
+                    momentum: float, per_group_batch: int):
+        # donate is deliberately NOT part of the key: the step is compiled
+        # once (donating iff self.donate) and non-owning callers protect
+        # their buffers via _BuiltStep.protected_call, so run()-then-step()
+        # on the same config reuses the compile instead of re-jitting
+        key = (strategy.name, g, lr, momentum, per_group_batch)
         step = self._steps.get(key)
         if step is None:
             step = strategy.build_step(self, g=g, lr=lr, momentum=momentum,
                                        per_group_batch=per_group_batch,
-                                       donate=donate)
+                                       donate=self.donate)
             self._steps[key] = step
         return step
 
@@ -180,9 +197,11 @@ class Engine:
         """One timed round on the global ``batch`` (leaves (B, ...)).
         Returns ``(params, mom, loss)``; wall time lands in telemetry.
 
-        Never donates: the caller owns these buffers and may hold other
-        references. Donation is ``run``'s optimization — its loop owns the
-        rebinding (and copies the caller's initial arrays once)."""
+        Never consumes the caller's buffers: the caller owns them and may
+        hold other references, so when the shared compiled step donates
+        (``Engine(donate=True)``, ``run``'s optimization) this call copies
+        params/momentum first (``protected_call``) instead of compiling a
+        second non-donating executable."""
         if not self.strategy.supports_step:
             raise ValueError(
                 f"strategy {self.strategy.name!r} has no per-round step; "
@@ -191,10 +210,9 @@ class Engine:
         built = self._built_step(
             self.strategy, g=self.num_groups, lr=self.lr,
             momentum=self.momentum,
-            per_group_batch=self._per_group_batch(self.num_groups, b),
-            donate=False)
+            per_group_batch=self._per_group_batch(self.num_groups, b))
         t0 = timing.monotonic()
-        params, mom, loss = built(params, mom, batch)
+        params, mom, loss = built.protected_call(params, mom, batch)
         jax.block_until_ready(loss)
         self.telemetry.record(step_s=timing.monotonic() - t0)
         return params, mom, loss
@@ -231,8 +249,7 @@ class Engine:
             built = self._built_step(
                 self.strategy, g=self.num_groups, lr=self.lr,
                 momentum=self.momentum,
-                per_group_batch=self._per_group_batch(self.num_groups, b),
-                donate=self.donate)
+                per_group_batch=self._per_group_batch(self.num_groups, b))
             params, mom, loss = built(params, mom, batch)
             losses.append(float(loss))          # syncs: step wall ends here
             t_done = timing.monotonic()
@@ -340,10 +357,11 @@ class Engine:
         built = self._built_step(
             self.strategy, g=self.num_groups, lr=self.lr,
             momentum=self.momentum,
-            per_group_batch=self._per_group_batch(self.num_groups, b),
-            donate=False)
-        return profile_device(built, (params, mom, batch), batch_size=b,
-                              warmup=warmup, iters=iters)
+            per_group_batch=self._per_group_batch(self.num_groups, b))
+        # the probe re-calls the step with the SAME buffers, so it must go
+        # through the copy-protected entry when the shared compile donates
+        return profile_device(built.protected_call, (params, mom, batch),
+                              batch_size=b, warmup=warmup, iters=iters)
 
     def profiled_spec(self, spec, params, mom, batch, **kw):
         """``DeviceSpec`` with its throughput measured from this engine."""

@@ -19,6 +19,35 @@ engine targets, bitwise run-anywhere reproducibility is worth more than
 the bandwidth (the production dry-run path keeps its psum-based
 GSPMD lowering).
 
+Overlapped bucketed exchange (``bucket_bytes > 0``, the default): the
+gradient tree is cut into flat slabs (``engine.buckets``) and each slab's
+``all_gather("data")`` + ``all_gather("group")`` depends only on its own
+leaves, so XLA's async collective pairs start as soon as a bucket's last
+gradient is produced and run concurrently with the rest of the backward
+pass — the exchange comes off the critical path instead of serializing
+after it. The closed-form grouped update is fused into each bucket's
+gather epilogue (``kernels.fused_update.fused_bucket_update`` on the
+slabs). Bucketing only *reorders independent gathers* and packs leaves by
+pure data movement, so the result stays bitwise equal to the whole-tree
+step and to ``make_reference_grouped_step``. ``bucket_bytes = 0`` keeps
+the legacy whole-tree arm (one gather pair per leaf, applied after the
+full backward) — the head-to-head baseline in ``benchmarks/run.py``.
+
+Donation audit: every parameter/momentum output carries an additive
+``- tie`` term where ``tie = (0.0 * (loss + sum_buckets sum(raw_grads)))²``
+— always ``+0.0`` for finite inputs (squaring kills a possible ``-0.0``,
+and subtracting ``+0.0`` is a bitwise identity for every float *including*
+``-0.0``), yet never constant-foldable because it propagates NaN/Inf.
+The term gives XLA's copy-insertion pass an *arithmetic* dependency from
+every reader of the round-start parameters (the backward pass and the
+loss) to every parameter write, so the donated input buffers can be
+updated in place: the compiled donating step contains no parameter-sized
+``copy`` instructions (pinned by tests/test_engine.py). A plain
+``optimization_barrier`` does not work here — XLA CPU's copy elision
+ignores barrier-induced ordering, and ordering paths that run through
+async collective pairs get no credit either, which is why the tie is
+computed from the *raw pre-gather* gradient slabs.
+
 ``make_reference_grouped_step`` is the single-device twin: ``lax.map``
 over the same (g, k) shard structure — unbatched per-shard gradients in
 shard order, identical means, identical update — so the SPMD step must
@@ -29,25 +58,50 @@ instead of vmapping them.)
 """
 from __future__ import annotations
 
+import warnings
 from typing import Callable, Optional, Sequence
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.async_sgd import apply_grouped_update, head_mask_tree
+from repro.engine.buckets import assign_buckets, pack_bucket, unpack_bucket
+from repro.kernels.fused_update.ops import fused_bucket_update
+from repro.optim.closed_form import grouped_coeffs, head_coeffs
+
+#: default per-bucket slab size target (bytes) for the overlapped
+#: exchange; 0 selects the legacy whole-tree arm
+DEFAULT_BUCKET_BYTES = 4 << 20
 
 
-def choose_data_parallel(per_group_batch: int, max_k: int) -> int:
+class StrandedDevicesWarning(UserWarning):
+    """The chosen within-group width k leaves device slots idle because
+    nothing larger divides the per-group microbatch."""
+
+
+def choose_data_parallel(per_group_batch: int, max_k: int, *,
+                         warn: bool = True) -> int:
     """Largest within-group data-parallel width k <= max_k that divides the
-    per-group microbatch."""
+    per-group microbatch. Falls back to k=1 when nothing divides; any
+    k < max_k strands ``max_k - k`` device slots per group — warned here
+    (``StrandedDevicesWarning``) and surfaced in ``Engine`` telemetry."""
     if per_group_batch < 1 or max_k < 1:
         return 1
-    for k in range(min(max_k, per_group_batch), 0, -1):
-        if per_group_batch % k == 0:
-            return k
-    return 1
+    k = 1
+    for cand in range(min(max_k, per_group_batch), 0, -1):
+        if per_group_batch % cand == 0:
+            k = cand
+            break
+    if warn and k < max_k:
+        warnings.warn(StrandedDevicesWarning(
+            f"per-group batch {per_group_batch} admits data-parallel "
+            f"width k={k} < {max_k}: {max_k - k} device slot(s) per group "
+            "stranded (pick a batch divisible by the per-group device "
+            "count to use the full mesh)"), stacklevel=2)
+    return k
 
 
 def device_batch_split(group_batch, k: int):
@@ -60,13 +114,26 @@ def device_batch_split(group_batch, k: int):
     return jax.tree.map(split, group_batch)
 
 
+def _donation_tie(loss, raw_slabs):
+    """The ``+0.0`` ordering term of the donation audit (module doc):
+    arithmetically depends on the loss and every raw pre-gather gradient,
+    is exactly ``+0.0`` for finite inputs, and propagates NaN/Inf (so XLA
+    cannot fold it away)."""
+    acc = loss.astype(jnp.float32)
+    for slab in raw_slabs:
+        acc = acc + jnp.sum(slab).astype(jnp.float32)
+    t = jnp.float32(0.0) * acc
+    return t * t          # squaring forces +0.0 (never -0.0)
+
+
 def make_spmd_grouped_step(loss_fn: Callable, mesh: Mesh, *, lr: float,
                            momentum: float, weight_decay: float = 0.0,
                            strategy: str = "fused",
                            head_filter: Optional[Callable] = None,
                            group_weights: Optional[Sequence[float]] = None,
                            update_impl: str = "xla",
-                           interpret: Optional[bool] = None):
+                           interpret: Optional[bool] = None,
+                           bucket_bytes: int = DEFAULT_BUCKET_BYTES):
     """Build the mesh-sharded ``step(params, mom, device_batch)``.
 
     ``device_batch`` leaves carry a leading (g, k, b/k) layout
@@ -77,8 +144,21 @@ def make_spmd_grouped_step(loss_fn: Callable, mesh: Mesh, *, lr: float,
     array — the scalar mean is taken on the host (deterministic float64)
     so the reported loss bit-matches the reference path too, instead of
     depending on how XLA fuses the final reduction.
+
+    ``bucket_bytes``: slab size target of the overlapped bucketed
+    exchange (module doc); 0 selects the legacy whole-tree arm.
     """
     g, k = mesh.shape["group"], mesh.shape["data"]
+    bucket_bytes = int(bucket_bytes)
+    if strategy == "fused":
+        coeffs = grouped_coeffs(g, lr=lr, momentum=momentum,
+                                weight_decay=weight_decay,
+                                group_weights=group_weights)
+        hcoeffs = head_coeffs(g, lr=lr, momentum=momentum,
+                              weight_decay=weight_decay,
+                              group_weights=group_weights)
+    else:
+        coeffs = hcoeffs = None
 
     def step(params, mom_buf, dbatch):
         head_mask = head_mask_tree(params, head_filter)
@@ -86,21 +166,83 @@ def make_spmd_grouped_step(loss_fn: Callable, mesh: Mesh, *, lr: float,
         def shard_fn(p, v, bt):
             local = jax.tree.map(lambda t: t[0, 0], bt)   # this device's shard
             loss, grad = jax.value_and_grad(loss_fn)(p, local)
-            # within-group sync data parallelism: gather the group's k shard
-            # gradients (bit-exact data movement), mean locally
-            grad = jax.tree.map(
-                lambda t: jax.lax.all_gather(t, "data").mean(axis=0), grad)
-            # across groups: stack the g per-group gradients on every device
-            grad = jax.tree.map(
-                lambda t: jax.lax.all_gather(t, "group"), grad)
+            # one collective for the loss board: a single gather over both
+            # mesh axes reshapes bit-identically to the old nested
+            # all_gather("data") + all_gather("group") pair
             losses = jax.lax.all_gather(
-                jax.lax.all_gather(loss, "data"), "group")     # (g, k)
-            p, v = apply_grouped_update(
-                p, grad, v, strategy=strategy, lr=lr, momentum=momentum,
-                weight_decay=weight_decay, head_mask=head_mask,
-                group_weights=group_weights, update_impl=update_impl,
-                interpret=interpret)
-            return p, v, losses
+                loss, ("group", "data")).reshape(g, k)
+
+            if bucket_bytes <= 0:
+                # legacy whole-tree arm: gather every leaf after the full
+                # backward pass (the pre-overlap baseline, kept for the
+                # head-to-head benchmark)
+                grad = jax.tree.map(
+                    lambda t: jax.lax.all_gather(t, "data").mean(axis=0),
+                    grad)
+                grad = jax.tree.map(
+                    lambda t: jax.lax.all_gather(t, "group"), grad)
+                p, v = apply_grouped_update(
+                    p, grad, v, strategy=strategy, lr=lr, momentum=momentum,
+                    weight_decay=weight_decay, head_mask=head_mask,
+                    group_weights=group_weights, update_impl=update_impl,
+                    interpret=interpret, coeffs=coeffs, hcoeffs=hcoeffs)
+                return p, v, losses
+
+            # ---- overlapped bucketed exchange ----
+            flat_g, tree = jax.tree.flatten(grad)
+            flat_p = tree.flatten_up_to(p)
+            flat_v = tree.flatten_up_to(v)
+            flat_m = tree.flatten_up_to(head_mask)
+            buckets = assign_buckets(flat_g, flat_m, bucket_bytes)
+            raw_slabs = [pack_bucket(b, flat_g) for b in buckets]
+            # each bucket's gather pair depends only on its own slab, so
+            # the async collectives overlap the remaining backward compute
+            gathered = []
+            for slab in raw_slabs:
+                s = jax.lax.all_gather(slab, "data").mean(axis=0)
+                gathered.append(jax.lax.all_gather(s, "group"))   # (g, n)
+            # the tie is applied to the update's *inputs* (not outputs):
+            # the in-place write the donated buffers receive is the update
+            # itself — an output-side tie would leave that write unordered
+            # against the forward/backward reads of the old values (the
+            # lax.scan carry of the scan strategy exhibits exactly that as
+            # a residual copy)
+            tie = _donation_tie(loss, raw_slabs)
+            flat_p = [t - tie for t in flat_p]
+            flat_v = [t - tie for t in flat_v]
+
+            new_p = list(flat_p)
+            new_v = list(flat_v)
+            if strategy == "fused":
+                # update fused into each bucket's gather epilogue, on the
+                # flat slabs; unpack (slice+reshape) back to leaves
+                for b, gs in zip(buckets, gathered):
+                    wn, vn = fused_bucket_update(
+                        pack_bucket(b, flat_p), pack_bucket(b, flat_v), gs,
+                        coeffs=hcoeffs if b.is_head else coeffs,
+                        impl=update_impl, interpret=interpret)
+                    for i, w_leaf, v_leaf in zip(b.indices,
+                                                 unpack_bucket(b, wn),
+                                                 unpack_bucket(b, vn)):
+                        new_p[i] = w_leaf
+                        new_v[i] = v_leaf
+            else:
+                # scan strategy: buckets only change the gather
+                # granularity — reassemble the per-leaf (g, ...) stacks
+                # and run the literal sequential oracle unchanged
+                flat_stacks = list(flat_g)
+                for b, gs in zip(buckets, gathered):
+                    for i, stack in zip(b.indices, unpack_bucket(b, gs)):
+                        flat_stacks[i] = stack
+                p2, v2 = apply_grouped_update(
+                    tree.unflatten(flat_p), tree.unflatten(flat_stacks),
+                    tree.unflatten(flat_v), strategy=strategy,
+                    lr=lr, momentum=momentum, weight_decay=weight_decay,
+                    head_mask=head_mask, group_weights=group_weights,
+                    update_impl=update_impl, interpret=interpret)
+                new_p = tree.flatten_up_to(p2)
+                new_v = tree.flatten_up_to(v2)
+            return tree.unflatten(new_p), tree.unflatten(new_v), losses
 
         return shard_map(
             shard_fn, mesh=mesh, check_rep=False,
@@ -108,6 +250,7 @@ def make_spmd_grouped_step(loss_fn: Callable, mesh: Mesh, *, lr: float,
             out_specs=(P(), P(), P()))(params, mom_buf, dbatch)
 
     step.mesh_shape = (g, k)
+    step.bucket_bytes = bucket_bytes
     return step
 
 
@@ -118,11 +261,16 @@ def make_reference_grouped_step(loss_fn: Callable, g: int, k: int, *,
                                 head_filter: Optional[Callable] = None,
                                 group_weights: Optional[Sequence[float]] = None,
                                 update_impl: str = "xla",
-                                interpret: Optional[bool] = None):
+                                interpret: Optional[bool] = None,
+                                bucket_bytes: int = DEFAULT_BUCKET_BYTES):
     """Single-device reference of the SPMD step: the same (g, k) shard
     structure executed sequentially (``lax.map`` over shards), the same
-    shard-mean and update. Bitwise target of ``make_spmd_grouped_step``.
+    shard-mean and update. Bitwise target of ``make_spmd_grouped_step``
+    at EVERY ``bucket_bytes`` (accepted and ignored here — bucketing is
+    a pure communication-schedule change).
     """
+    del bucket_bytes
+
     def step(params, mom_buf, dbatch):
         flat = jax.tree.map(
             lambda t: t.reshape((g * k,) + t.shape[2:]), dbatch)

@@ -70,15 +70,22 @@ class _BuiltStep:
 
     spmd/reference bodies return per-shard (g, k) losses (their scalar
     mean is backend-fusion-dependent); ``__call__`` reduces them on the
-    host in float64 so every mode reports one deterministic scalar."""
+    host in float64 so every mode reports one deterministic scalar.
+
+    One compile serves both donating and non-donating callers: the step
+    is jitted once (``donating`` records whether its params/momentum args
+    are donated) and callers that do NOT own their buffers go through
+    ``protected_call``, which copies them first when the compile donates
+    — donation never enters the Engine's compile-cache key."""
 
     def __init__(self, fn: Callable, raw: Callable, prepare: Callable,
-                 mode: str, g: int, k: int):
+                 mode: str, g: int, k: int, donating: bool = False):
         self.fn = fn              # jitted (params, mom, device_batch)
         self.raw = raw            # un-jitted body (for lax.scan runs)
         self.prepare = prepare    # host: global batch -> device-form batch
         self.mode = mode          # "spmd" | "reference" | "vmap"
         self.g, self.k = g, k
+        self.donating = donating  # fn donates its params/momentum args
         self.run_fn = None        # lazily-cached jitted whole-run scan
 
     @staticmethod
@@ -90,6 +97,15 @@ class _BuiltStep:
     def __call__(self, params, mom, batch):
         params, mom, loss = self.fn(params, mom, self.prepare(batch))
         return params, mom, self.scalar_loss(loss)
+
+    def protected_call(self, params, mom, batch):
+        """Call without consuming ``params``/``mom``: copies them first
+        iff the shared compile donates (callers that own their buffers —
+        ``Engine.run``'s loop — use ``__call__`` directly)."""
+        if self.donating:
+            params = jax.tree.map(jax.numpy.copy, params)
+            mom = jax.tree.map(jax.numpy.copy, mom)
+        return self(params, mom, batch)
 
 
 class GroupedStrategy(Strategy):
@@ -106,7 +122,9 @@ class GroupedStrategy(Strategy):
                       group_weights=weights, update_impl=engine.update_impl,
                       interpret=engine.interpret)
         if mode == "spmd":
-            raw = make_spmd_grouped_step(engine.loss_fn, mesh, **common)
+            raw = make_spmd_grouped_step(engine.loss_fn, mesh,
+                                         bucket_bytes=engine.bucket_bytes,
+                                         **common)
         elif mode == "reference":
             raw = make_reference_grouped_step(engine.loss_fn, g, k, **common)
         else:
@@ -120,13 +138,16 @@ class GroupedStrategy(Strategy):
             return gb
 
         fn = jax.jit(raw, donate_argnums=(0, 1) if donate else ())
-        return _BuiltStep(fn, raw, prepare, mode, g, k)
+        return _BuiltStep(fn, raw, prepare, mode, g, k, donating=donate)
 
     def run_stacked(self, engine, params, batches, *, g, lr, momentum):
         b = jax.tree.leaves(batches)[0].shape[1]
         per_group = engine._per_group_batch(g, b)
+        # only step.raw / step.run_fn are used below (never the possibly
+        # donating step.fn): Algorithm-1 probe runs re-enter with the same
+        # parameter buffers, so the whole-run scan stays undonated
         step = engine._built_step(self, g=g, lr=lr, momentum=momentum,
-                                  per_group_batch=per_group, donate=False)
+                                  per_group_batch=per_group)
         dbatches = jax.vmap(step.prepare)(batches)
         mom = jax.tree.map(jax.numpy.zeros_like, params)
 

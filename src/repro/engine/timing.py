@@ -94,6 +94,14 @@ class Telemetry:
         self.skip = skip
         self.step_s: List[float] = []
         self.data_s: List[float] = []
+        self.notes: List[str] = []
+
+    def note(self, msg: str) -> None:
+        """Record a configuration observation (e.g. stranded devices when
+        the chosen data-parallel width leaves slots idle). Deduplicated —
+        resolution decisions repeat every built step."""
+        if msg not in self.notes:
+            self.notes.append(str(msg))
 
     def __len__(self) -> int:
         return len(self.step_s)
@@ -140,4 +148,6 @@ class Telemetry:
         }
         if batch_size is not None:
             out["examples_per_s"] = self.throughput(batch_size)
+        if self.notes:
+            out["notes"] = list(self.notes)
         return out

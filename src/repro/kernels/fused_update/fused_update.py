@@ -53,7 +53,9 @@ def _kernel(w_ref, v_ref, g_ref, wo_ref, vo_ref, *, coeffs: GroupedCoeffs):
 def fused_update_pallas(w: jax.Array, v: jax.Array, gstack: jax.Array,
                         coeffs: GroupedCoeffs, *, block_rows: int = 256,
                         interpret: bool = False):
-    """One leaf: w/v any shape, gstack (g, *w.shape). Returns (w_new, v_new).
+    """One leaf or one bucket slab: w/v any shape (a flat (n,) packing of
+    several leaves works — everything is flattened to lane tiles anyway),
+    gstack (g, *w.shape). Returns (w_new, v_new).
 
     On CPU (this container) run with interpret=True; the XLA reference in
     ref.py is the production non-TPU path.

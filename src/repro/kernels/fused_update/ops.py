@@ -1,6 +1,6 @@
 """Public wrappers for the fused grouped update: a jit'd per-leaf entry
-point and the single-traversal tree-level update used by the training
-step."""
+point, the single-traversal tree-level update, and the per-bucket slab
+entry used by the overlapped SPMD exchange (``engine.spmd``)."""
 from __future__ import annotations
 
 import functools
@@ -33,6 +33,20 @@ def fused_update(w, v, gstack, *, coeffs: GroupedCoeffs, impl: str = "xla",
     interpret mode elsewhere when interpret is None); impl='xla' the
     reference combination (production path off-TPU)."""
     return _leaf_update(w, v, gstack, coeffs, impl=impl,
+                        block_rows=block_rows, interpret=interpret)
+
+
+def fused_bucket_update(w_slab, v_slab, gstack, *, coeffs: GroupedCoeffs,
+                        impl: str = "xla", block_rows: int = 256,
+                        interpret=None):
+    """Per-bucket slab update for the overlapped SPMD exchange: ``w_slab``
+    / ``v_slab`` are (n,) flat packings of a bucket's leaves
+    (``engine.buckets.pack_bucket``), ``gstack`` the gathered (g, n)
+    gradient slab. Both the Pallas kernel and the XLA reference are
+    shape-agnostic elementwise combinations, so the slab result is
+    bit-identical to the per-leaf updates it replaces. Not jitted: the
+    caller traces inside ``shard_map``."""
+    return _leaf_update(w_slab, v_slab, gstack, coeffs, impl=impl,
                         block_rows=block_rows, interpret=interpret)
 
 

@@ -11,7 +11,10 @@ from repro.optim.closed_form import GroupedCoeffs
 
 def fused_update_ref(w: jax.Array, v: jax.Array, gstack: jax.Array,
                      coeffs: GroupedCoeffs):
-    """One leaf: w/v any shape, gstack (g, *w.shape). Returns (w_new, v_new)."""
+    """One leaf OR one bucket slab: w/v any shape (including a flat (n,)
+    packing of several leaves), gstack (g, *w.shape). The combination is
+    purely elementwise, so slab and per-leaf results are bit-identical.
+    Returns (w_new, v_new)."""
     if gstack.shape[0] != coeffs.num_groups:
         raise ValueError(f"gstack has {gstack.shape[0]} groups, "
                          f"coeffs {coeffs.num_groups}")

@@ -128,6 +128,11 @@ def main(argv=None):
     ap.add_argument("--update-impl", choices=("xla", "pallas"), default="xla",
                     help="leaf kernel for the fused update (pallas runs "
                          "interpret-mode off-TPU)")
+    ap.add_argument("--bucket-bytes", type=int, default=None,
+                    help="slab size target of the SPMD step's overlapped "
+                         "bucketed gradient exchange (0 = legacy "
+                         "whole-tree gather; default engine.spmd."
+                         "DEFAULT_BUCKET_BYTES)")
     ap.add_argument("--conv-impl",
                     choices=("xla", "lowering", "lowering_interpret",
                              "lowering_autodiff"),
@@ -206,6 +211,8 @@ def main(argv=None):
                     group_weights=group_weights, micro_sizes=micro_sizes,
                     head_filter=head_filter, update_impl=args.update_impl,
                     exec_mode=args.exec_mode,
+                    **({"bucket_bytes": args.bucket_bytes}
+                       if args.bucket_bytes is not None else {}),
                     checkpoint_dir=args.ckpt,
                     checkpoint_every=args.steps if args.ckpt else 0)
     print(f"arch={name} {engine.describe(groups, args.batch // groups)}"

@@ -1,0 +1,147 @@
+"""Tests for the perf gate (benchmarks/compare.py): metric extraction
+from BENCH_*.json, the IQR-aware regression rule, cross-machine
+normalization, and the CLI exit codes CI keys off."""
+import importlib.util
+import json
+from pathlib import Path
+
+import pytest
+
+_SPEC = importlib.util.spec_from_file_location(
+    "bench_compare",
+    Path(__file__).resolve().parent.parent / "benchmarks" / "compare.py")
+compare = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(compare)
+
+
+def _stats(min_us, iqr_us=0.0):
+    return {"min_us": min_us, "median_us": min_us * 1.1,
+            "iqr_us": iqr_us, "iters": 15}
+
+
+def test_extract_metrics_names_rows_by_identity_not_position():
+    doc = {
+        "bench": "engine",
+        "device_count": 8,
+        "rows": [
+            {"g": 2, "mode": "spmd", "step": _stats(100.0)},
+            {"g": 4, "mode": "spmd", "step": _stats(200.0)},
+        ],
+        "overlap": [
+            {"g": 2, "bucket_bytes": 0, "variant": "wholetree",
+             "step": _stats(300.0)},
+        ],
+        "meta": {"note": "not a metric"},
+    }
+    m = compare.extract_metrics(doc)
+    assert len(m) == 3
+    key = "[bench=engine,device_count=8].rows[g=2,mode=spmd].step"
+    assert m[key]["min_us"] == 100.0
+    # reordering the rows must produce the SAME metric names
+    doc2 = dict(doc)
+    doc2["rows"] = list(reversed(doc["rows"]))
+    assert set(compare.extract_metrics(doc2)) == set(m)
+
+
+def test_identical_passes_and_regression_trips():
+    base = {"a": _stats(100.0), "b": _stats(50.0)}
+    rep = compare.compare_metrics(base, base)
+    assert rep["regressions"] == 0 and not rep["missing"]
+    assert all(r["status"] == "ok" for r in rep["rows"])
+
+    fresh = {"a": _stats(100.0), "b": _stats(120.0)}   # 2.4x on b
+    rep = compare.compare_metrics(base, fresh)
+    assert rep["regressions"] == 1
+    bad = [r for r in rep["rows"] if r["status"] == "regression"]
+    assert bad[0]["metric"] == "b"
+
+
+def test_iqr_slack_suppresses_noise_but_not_clean_regressions():
+    # 20% over on a noisy metric (IQR covers it): no alarm
+    base = {"m": _stats(100.0, iqr_us=30.0)}
+    rep = compare.compare_metrics(base, {"m": _stats(120.0, iqr_us=5.0)})
+    assert rep["regressions"] == 0
+    # the same 20% on a quiet metric trips the 15% default tolerance
+    base = {"m": _stats(100.0, iqr_us=1.0)}
+    rep = compare.compare_metrics(base, {"m": _stats(120.0, iqr_us=1.0)})
+    assert rep["regressions"] == 1
+    # fresh-side IQR also widens the gate (shared-CPU box noise)
+    rep = compare.compare_metrics(base, {"m": _stats(120.0, iqr_us=40.0)})
+    assert rep["regressions"] == 0
+
+
+def test_improved_new_and_missing_statuses():
+    base = {"kept": _stats(100.0), "gone": _stats(10.0)}
+    fresh = {"kept": _stats(50.0), "added": _stats(5.0)}
+    rep = compare.compare_metrics(base, fresh)
+    by = {r["metric"]: r["status"] for r in rep["rows"]}
+    assert by == {"kept": "improved", "added": "new"}
+    assert rep["missing"] == ["gone"]     # coverage shrink => failure
+
+
+def test_normalize_forgives_uniform_slowdown_flags_outlier():
+    base = {f"m{i}": _stats(100.0) for i in range(5)}
+    # uniformly 2x slower machine: no regression under --normalize
+    fresh = {f"m{i}": _stats(200.0) for i in range(5)}
+    rep = compare.compare_metrics(base, fresh, normalize=True)
+    assert rep["speed"] == pytest.approx(2.0)
+    assert rep["regressions"] == 0
+    # same machine factor, but one metric 3x slower: flagged
+    fresh["m3"] = _stats(600.0)
+    rep = compare.compare_metrics(base, fresh, normalize=True)
+    assert rep["regressions"] == 1
+    # without normalization the uniform slowdown (rightly) fails
+    rep = compare.compare_metrics(base, {f"m{i}": _stats(200.0)
+                                         for i in range(5)})
+    assert rep["regressions"] == 5
+
+
+def _write(d: Path, name: str, doc: dict):
+    (d / name).write_text(json.dumps(doc))
+
+
+def test_cli_exit_codes_and_markdown(tmp_path):
+    base_dir, fresh_dir = tmp_path / "base", tmp_path / "fresh"
+    base_dir.mkdir(), fresh_dir.mkdir()
+    doc = {"bench": "engine", "rows": [{"g": 2, "step": _stats(100.0)}]}
+    _write(base_dir, "BENCH_engine.json", doc)
+    _write(fresh_dir, "BENCH_engine.json", doc)
+
+    md = tmp_path / "summary.md"
+    assert compare.main([str(base_dir), str(fresh_dir),
+                         "--markdown", str(md)]) == 0
+    assert "BENCH_engine.json" in md.read_text()
+
+    # injected regression: 2x min_us on the one metric -> exit 1 + marker
+    bad = {"bench": "engine", "rows": [{"g": 2, "step": _stats(200.0)}]}
+    _write(fresh_dir, "BENCH_engine.json", bad)
+    md2 = tmp_path / "summary2.md"
+    assert compare.main([str(base_dir), str(fresh_dir),
+                         "--markdown", str(md2)]) == 1
+    assert "REGRESSION" in md2.read_text()
+
+    # fresh emission missing entirely -> exit 1
+    (fresh_dir / "BENCH_engine.json").unlink()
+    assert compare.main([str(base_dir), str(fresh_dir)]) == 1
+
+    # no baselines at all -> usage error (exit 2)
+    assert compare.main([str(fresh_dir), str(base_dir)]) == 2
+
+    # --benches filter selecting nothing -> usage error
+    _write(fresh_dir, "BENCH_engine.json", doc)
+    assert compare.main([str(base_dir), str(fresh_dir),
+                         "--benches", "nope"]) == 2
+
+
+def test_gate_on_committed_baselines_is_self_consistent():
+    """The committed BENCH_*.json must pass the gate against themselves —
+    guards against committing baselines the extractor cannot parse."""
+    repo = Path(__file__).resolve().parent.parent
+    files = sorted(repo.glob("BENCH_*.json"))
+    if not files:
+        pytest.skip("no committed baselines")
+    ok, reports, _ = compare.compare_dirs(repo, repo, tol=0.15,
+                                          normalize=False)
+    assert ok
+    for name, rep in reports.items():
+        assert rep["shared"] > 0, f"{name}: no metrics extracted"
