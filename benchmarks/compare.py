@@ -26,8 +26,16 @@ that median. Blind spot (documented, accepted): a uniform slowdown of
 every metric reads as "slower machine" — the gate catches *relative*
 regressions, which is what a code change produces.
 
+Environment guard: every BENCH emitter stamps ``run_metadata()`` under
+``"env"`` (``repro.obs.meta``). Under ``--normalize`` the gate REFUSES
+to compare files whose strict env keys (jax version, backend, device
+kind/count) differ — a different device pool is a different benchmark,
+not a machine-speed factor. Files without a stamp (pre-observability
+baselines) compare as before; ``--allow-env-mismatch`` overrides.
+
 Exit status: 0 = pass, 1 = regression (or a baseline metric disappeared,
-which would otherwise silently shrink coverage), 2 = usage error.
+which would otherwise silently shrink coverage, or an env-mismatch
+refusal), 2 = usage error.
 """
 from __future__ import annotations
 
@@ -35,6 +43,10 @@ import argparse
 import json
 import sys
 from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.obs.meta import env_mismatches  # noqa: E402
 
 #: keys that identify a row inside a list (checked in order); values must
 #: be scalars. "bench"/"device_count" identify top-level sections.
@@ -155,8 +167,14 @@ def markdown_table(name: str, report: dict, *, show_ok: bool = True) -> str:
     return "\n".join(lines)
 
 
+def _env_of(path: Path):
+    env = json.loads(path.read_text()).get("env")
+    return env if isinstance(env, dict) else None
+
+
 def compare_dirs(base_dir: Path, fresh_dir: Path, *, tol: float,
-                 normalize: bool, benches=None):
+                 normalize: bool, benches=None,
+                 allow_env_mismatch: bool = False):
     """Compare every BENCH_*.json present in ``base_dir`` against its twin
     in ``fresh_dir``. Returns (ok, per-file reports, markdown)."""
     files = sorted(base_dir.glob("BENCH_*.json"))
@@ -174,6 +192,20 @@ def compare_dirs(base_dir: Path, fresh_dir: Path, *, tol: float,
             md.append(f"### {f.name}\n\n**MISSING fresh emission** — the "
                       "bench did not run or crashed.\n")
             continue
+        if normalize and not allow_env_mismatch:
+            mism = env_mismatches(_env_of(f), _env_of(twin))
+            if mism:
+                ok = False
+                reports[f.name] = {
+                    "error": "env mismatch: " + "; ".join(mism)}
+                md.append(
+                    f"### {f.name}\n\n**ENV MISMATCH** — --normalize "
+                    "refuses to absorb a structurally different "
+                    "environment into the machine-speed factor:\n\n"
+                    + "".join(f"- {m}\n" for m in mism)
+                    + "\n(re-baseline, or pass --allow-env-mismatch to "
+                      "override)\n")
+                continue
         rep = compare_metrics(load_bench(f), load_bench(twin), tol=tol,
                               normalize=normalize)
         reports[f.name] = rep
@@ -194,7 +226,11 @@ def main(argv=None) -> int:
                          "(default 0.15; IQR slack is added on top)")
     ap.add_argument("--normalize", action="store_true",
                     help="divide fresh timings by the median fresh/base "
-                         "ratio (cross-machine CI mode)")
+                         "ratio (cross-machine CI mode); refuses "
+                         "strict-env mismatches (module docstring)")
+    ap.add_argument("--allow-env-mismatch", action="store_true",
+                    help="compare despite differing env stamps (e.g. a "
+                         "deliberate jax upgrade before re-baselining)")
     ap.add_argument("--benches", type=str, default="",
                     help="comma-separated bench names (default: every "
                          "baseline file)")
@@ -207,7 +243,8 @@ def main(argv=None) -> int:
         ok, reports, md = compare_dirs(
             args.baseline, args.fresh, tol=args.tol,
             normalize=args.normalize,
-            benches=[b for b in args.benches.split(",") if b])
+            benches=[b for b in args.benches.split(",") if b],
+            allow_env_mismatch=args.allow_env_mismatch)
     except FileNotFoundError as e:
         print(f"error: {e}", file=sys.stderr)
         return 2

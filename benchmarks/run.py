@@ -29,6 +29,7 @@ sys.path.insert(0, str(ROOT / "src"))
 
 from repro.engine import timing  # noqa: E402  (one clock repo-wide)
 from repro.engine.timing import monotonic  # noqa: E402
+from repro.obs.meta import run_metadata  # noqa: E402  (BENCH env stamp)
 
 
 def _row(name, us, derived):
@@ -340,7 +341,7 @@ def bench_grouped_step():
         _row(f"grouped_step_g{g}", fused_t.median_s * 1e6,
              f"scan_us={scan_t.median_s * 1e6:.1f};speedup={speedup:.2f}x")
 
-    out = {"bench": "grouped_step",
+    out = {"bench": "grouped_step", "env": run_metadata(),
            "params": int(sum(p.size for p in jax.tree.leaves(params))),
            "lr": lr, "momentum": mu, "weight_decay": wd,
            "timeit": {"warmup": 2, "iters": 11,
@@ -389,7 +390,7 @@ def bench_planner():
         _row(f"planner_g{g}", p.t_iteration * 1e6,
              f"P_SE={p.se_penalty:.2f};score={p.time_score*1e3:.3f}ms")
 
-    out = {"bench": "planner",
+    out = {"bench": "planner", "env": run_metadata(),
            "cluster": "8xgpu-g2.2xlarge,8xcpu-c4.4xlarge",
            "global_batch": batch, "t_fc": t_fc,
            "search_s": search_s, "search": search_t.row(),
@@ -508,7 +509,8 @@ def bench_engine():
                  f"speedup_vs_wholetree="
                  f"{row['speedup_vs_wholetree_min']:.2f}x")
 
-    out = {"bench": "engine", "workload": "mlp_classify(batch=64)",
+    out = {"bench": "engine", "env": run_metadata(),
+           "workload": "mlp_classify(batch=64)",
            "strategy": "grouped-fused",
            "timeit": {"steps": 12, "stat": "min+median+iqr per row "
                                            "('step'); legacy step_us is "
@@ -654,7 +656,7 @@ def bench_cnn_throughput(archs=("lenet", "cifarnet", "caffenet"),
             summary[f"caffenet_smoke_custom_vjp_vs_autodiff_b{bsz}"] = \
                 auto / cust
 
-    out = {"bench": "cnn_throughput",
+    out = {"bench": "cnn_throughput", "env": run_metadata(),
            "configs": {a: dataclasses.asdict(C.get_cnn_smoke_config(a))
                        for a in archs},
            "impls": list(impls), "batch_sizes": list(batch_sizes),

@@ -36,6 +36,8 @@ def fixed_strategy(runner, state, g, mu, eta, steps=400):
 
 
 def hetero_plan_and_train(wl, runner, state):
+    """Returns the trained Engine (its metric registry feeds --metrics-out
+    / the HE x SE report)."""
     """Profile -> plan -> validate -> train on a mixed 8xGPU+8xCPU cluster."""
     params = state[0]
     batch0 = jax.tree.map(lambda x: x[0],
@@ -79,15 +81,60 @@ def hetero_plan_and_train(wl, runner, state):
           f"loss {losses[0]:.4f} -> {np.mean(losses[-5:]):.4f} "
           f"({engine.telemetry.median_step_s() * 1e3:.1f} ms/step)")
 
+    # per-group service times the planner predicted, recorded into the
+    # same metric stream the run's step times land in (one registry =
+    # predictions and measurements in one sink file)
+    reg = engine.telemetry.registry
+    svc = reg.series("group_service_s")
+    for gid, t in enumerate(plan.group_times):
+        svc.append(float(t), step=gid)
+    reg.gauge("planned_g").set(plan.g)
+
+    # HE x SE decomposition: recompute T(g, alloc) from the run's own
+    # metric stream against a plan calibrated from that stream
+    # (obs.report docstring) — the predict->measure loop, closed
+    from repro.obs.report import calibrated_plan, hexse_report
+    cal = calibrated_plan(engine.telemetry, g=plan.g,
+                          global_batch=wl.batch_size)
+    rep = hexse_report(engine.telemetry, cal)
+    print("  " + rep.render().replace("\n", "\n  "))
+
     # and Algorithm 1 seeded by the planner instead of the homogeneous
     # FC-saturation short-circuit
     res = algorithm1(runner, state, n_devices=len(devices), epochs=1,
                      epoch_steps=120, probe_steps=40, plan=plan)
     print(f"  algorithm1(plan) started at g={plan.g}, settled at "
           f"g={res.g}, mu={res.mu}, eta={res.eta}")
+    return engine
 
 
-def main():
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--metrics-out", default="",
+                    help="sink the hetero-train metric stream (step_s, "
+                         "group_service_s, ...) to this JSONL file")
+    ap.add_argument("--trace-out", default="",
+                    help="export a Chrome trace of the demo's spans "
+                         "(engine phases, cluster probe, Algorithm-1 "
+                         "probes) to this file")
+    args = ap.parse_args(argv)
+    from repro.obs import spans
+    with spans.maybe_traced(bool(args.trace_out)) as tracer:
+        engine = _demo()
+    if args.metrics_out:
+        from repro.obs import run_metadata
+        n = engine.telemetry.registry.to_jsonl(
+            args.metrics_out, run_metadata(extra={"demo": "autotune"}))
+        print(f"metrics -> {args.metrics_out} ({n} records)")
+    if args.trace_out:
+        from repro.obs import export_chrome_trace
+        n = export_chrome_trace(args.trace_out, tracer=tracer,
+                                metrics=engine.telemetry.registry)
+        print(f"chrome trace -> {args.trace_out} ({n} events)")
+
+
+def _demo():
     wl = cnn_classify()
     runner = make_runner(wl, seed=0)
     state = init_state(wl, seed=0)
@@ -113,8 +160,9 @@ def main():
     # CPU-S cluster (§VI-B3), where fully-synchronous won.
 
     print("== heterogeneous cluster: profile -> plan -> train ==")
-    hetero_plan_and_train(wl, runner, state)
+    engine = hetero_plan_and_train(wl, runner, state)
     print("OK")
+    return engine
 
 
 if __name__ == "__main__":

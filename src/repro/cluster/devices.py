@@ -137,16 +137,21 @@ def profile_device(step_fn: Callable, args: Sequence, *, batch_size: int,
     """
     if batch_size < 1:
         raise ValueError("batch_size must be >= 1")
-    for _ in range(warmup):
-        jax.block_until_ready(step_fn(*args))
-    times = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(step_fn(*args))
-        times.append(time.perf_counter() - t0)
-    times.sort()
-    median = times[len(times) // 2]
-    return batch_size / median
+    from repro.obs import spans
+    with spans.span("cluster.profile_device", batch_size=batch_size,
+                    warmup=warmup, iters=iters) as sp:
+        for _ in range(warmup):
+            jax.block_until_ready(step_fn(*args))
+        times = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(step_fn(*args))
+            times.append(time.perf_counter() - t0)
+        times.sort()
+        median = times[len(times) // 2]
+        thr = batch_size / median
+        sp.set(examples_per_s=thr)
+    return thr
 
 
 def profiled_spec(spec: DeviceSpec, step_fn: Callable, args: Sequence, *,
@@ -158,11 +163,13 @@ def profiled_spec(spec: DeviceSpec, step_fn: Callable, args: Sequence, *,
     return dataclasses.replace(spec, throughput=thr)
 
 
-def spec_from_telemetry(spec: DeviceSpec, telemetry, *,
-                        batch_size: int) -> DeviceSpec:
+def spec_from_telemetry(spec: DeviceSpec, telemetry, *, batch_size: int,
+                        window: Optional[int] = None) -> DeviceSpec:
     """``spec`` with throughput taken from an execution engine's per-step
     telemetry (``repro.engine.timing.Telemetry``) — the planner-calibration
     path that needs no extra probe run: the training steps the engine
-    already timed ARE the black-box measurement."""
+    already timed ARE the black-box measurement. ``window`` calibrates
+    from only the most recent N steady steps (time-varying clusters —
+    the online ``rebalance()`` hook; see also ``Telemetry.drift``)."""
     return dataclasses.replace(
-        spec, throughput=telemetry.throughput(batch_size))
+        spec, throughput=telemetry.throughput(batch_size, window=window))

@@ -11,6 +11,7 @@ small variants used by the optimizer experiments).
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Iterator
 
 import jax
@@ -99,7 +100,8 @@ class SyntheticImages:
                    "labels": y.astype(np.int32)}
 
 
-def prefetch(it: Iterator[dict], depth: int = 2) -> Iterator[dict]:
+def prefetch(it: Iterator[dict], depth: int = 2, tracer=None,
+             metrics=None) -> Iterator[dict]:
     """Software pipeline that owns the host->device transfer.
 
     Contract (pinned by tests/test_hlo_and_substrate.py::
@@ -109,11 +111,33 @@ def prefetch(it: Iterator[dict], depth: int = 2) -> Iterator[dict]:
     i+depth is in flight while the consumer computes on batch i. (The old
     generators yielded ``jnp`` arrays, which made the ``device_put`` here
     a no-op and the "prefetch" a plain buffer.)
+
+    ``tracer`` (an ``obs.spans`` tracer; defaults to the installed one)
+    wraps each transfer in a ``data.h2d`` span; ``metrics`` (an
+    ``obs.metrics.MetricRegistry``) records the transfer-dispatch wall
+    time into an ``h2d_s`` series. Both are free when disabled: the
+    transfer is only timed when someone is listening.
     """
     import collections
+
+    from repro.obs import spans
+    if tracer is None:
+        tracer = spans.current()
+    h2d = metrics.series("h2d_s") if metrics is not None else None
+    timed = h2d is not None or tracer.enabled
     buf = collections.deque()
-    for batch in it:
-        buf.append(jax.device_put(batch))
+    for i, batch in enumerate(it):
+        with tracer.span("data.h2d", index=i) as sp:
+            if timed:
+                t0 = time.perf_counter()
+                dev = jax.device_put(batch)
+                dt = time.perf_counter() - t0
+                sp.set(dispatch_s=dt)
+                if h2d is not None:
+                    h2d.append(dt, step=i)
+            else:
+                dev = jax.device_put(batch)
+        buf.append(dev)
         if len(buf) > depth:
             yield buf.popleft()
     while buf:

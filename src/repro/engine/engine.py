@@ -12,8 +12,13 @@ scripts):
 - parameter/batch placement and buffer donation of the jitted step;
 - host-side batch preparation (group split, sized heterogeneous shares,
   per-device shards) and prefetch;
-- per-step monotonic telemetry (``engine.timing``) that feeds the cluster
-  subsystem's black-box device profiling and planner calibration;
+- per-step observability: ``engine.timing.Telemetry`` is a facade over an
+  ``obs.metrics.MetricRegistry`` (step_s / data_wait_s / h2d_s / loss
+  series — the stream the cluster subsystem calibrates from and
+  ``train.py --metrics-out`` sinks to JSONL), and every phase of a round
+  (data wait, dispatch, block, checkpoint) runs inside an ``obs.spans``
+  span — zero-cost no-ops unless a tracer is installed, Chrome-trace
+  exportable when one is (docs/observability.md);
 - checkpoint hooks;
 - the Algorithm-1 ``Runner`` protocol: an Engine *is* a Runner —
   ``engine(state, g=..., mu=..., eta=..., steps=..., probe=...)``.
@@ -35,6 +40,9 @@ from repro.data.pipeline import prefetch
 from repro.engine import timing
 from repro.engine.spmd import DEFAULT_BUCKET_BYTES, choose_data_parallel
 from repro.engine.strategies import Strategy, get_strategy
+from repro.obs import spans
+
+_END = object()     # prefetch-exhausted sentinel (run's data-wait spans)
 
 
 class Engine:
@@ -60,6 +68,12 @@ class Engine:
     ``bucket_bytes`` sets the slab size target of the SPMD step's
     overlapped bucketed gradient exchange (``engine.spmd``; 0 restores
     the legacy whole-tree gather).
+
+    ``tracer``: an ``obs.spans`` tracer recording the engine's phase
+    spans (run / data_wait / dispatch / block_until_ready / checkpoint,
+    plus per-bucket exchange annotations on the SPMD path). Defaults to
+    the tracer installed via ``obs.spans.install()`` at construction
+    time — a shared no-op when none is.
     """
 
     def __init__(self, loss_fn: Callable, *, strategy: str = "grouped-fused",
@@ -77,7 +91,8 @@ class Engine:
                  trace=None, replay_impl: str = "scan",
                  replay_depth: Optional[int] = None,
                  checkpoint_dir: str = "", checkpoint_every: int = 0,
-                 prefetch_depth: int = 2, telemetry_skip: int = 1):
+                 prefetch_depth: int = 2, telemetry_skip: int = 1,
+                 tracer=None):
         if exec_mode not in ("auto", "spmd", "reference", "vmap"):
             raise ValueError(f"unknown exec_mode {exec_mode!r}")
         self.loss_fn = loss_fn
@@ -105,6 +120,9 @@ class Engine:
         self.checkpoint_every = checkpoint_every
         self.prefetch_depth = prefetch_depth
         self.telemetry = timing.Telemetry(skip=telemetry_skip)
+        # span tracer: the one installed via obs.spans.install() unless
+        # given explicitly; a NullTracer (shared no-op spans) by default
+        self.tracer = tracer if tracer is not None else spans.current()
         self._steps: dict = {}
 
     # ------------------------------------------------------------------
@@ -211,11 +229,37 @@ class Engine:
             self.strategy, g=self.num_groups, lr=self.lr,
             momentum=self.momentum,
             per_group_batch=self._per_group_batch(self.num_groups, b))
-        t0 = timing.monotonic()
-        params, mom, loss = built.protected_call(params, mom, batch)
-        jax.block_until_ready(loss)
-        self.telemetry.record(step_s=timing.monotonic() - t0)
+        self._annotate_buckets(built, params)
+        with self.tracer.span("engine.step", g=self.num_groups,
+                              mode=built.mode):
+            t0 = timing.monotonic()
+            params, mom, loss = built.protected_call(params, mom, batch)
+            jax.block_until_ready(loss)
+            self.telemetry.record(step_s=timing.monotonic() - t0)
         return params, mom, loss
+
+    def _annotate_buckets(self, built, params) -> None:
+        """One-time per built step: emit an ``exchange.bucket`` instant
+        per gradient slab of the overlapped SPMD exchange (bytes, leaf
+        count, head-ness), so the trace shows the collective layout the
+        compiled step executes. The layout is host-computable from the
+        parameter tree — the collectives themselves run inside jit, where
+        host spans cannot reach."""
+        if not self.tracer.enabled or getattr(built, "buckets_annotated",
+                                              False):
+            return
+        built.buckets_annotated = True
+        if built.mode != "spmd" or self.bucket_bytes <= 0:
+            return
+        from repro.core.async_sgd import head_mask_tree
+        from repro.engine.buckets import assign_buckets
+        leaves, tree = jax.tree.flatten(params)
+        mask = tree.flatten_up_to(head_mask_tree(params, self.head_filter))
+        for i, b in enumerate(assign_buckets(leaves, mask,
+                                             self.bucket_bytes)):
+            self.tracer.instant("exchange.bucket", bucket=i,
+                                bytes=b.nbytes, leaves=len(b.indices),
+                                dtype=b.dtype, head=b.is_head)
 
     # ------------------------------------------------------------------
     # whole runs
@@ -238,28 +282,42 @@ class Engine:
             # donation can't delete arrays the caller still holds
             params = jax.tree.map(jnp.copy, params)
             mom = jax.tree.map(jnp.copy, mom)
+        tracer = self.tracer
         losses = []
-        t_prev = timing.monotonic()
-        for i, batch in enumerate(prefetch(iter(batches),
-                                           depth=self.prefetch_depth)):
-            if i >= steps:
-                break
-            t_ready = timing.monotonic()
-            b = jax.tree.leaves(batch)[0].shape[0]
-            built = self._built_step(
-                self.strategy, g=self.num_groups, lr=self.lr,
-                momentum=self.momentum,
-                per_group_batch=self._per_group_batch(self.num_groups, b))
-            params, mom, loss = built(params, mom, batch)
-            losses.append(float(loss))          # syncs: step wall ends here
-            t_done = timing.monotonic()
-            self.telemetry.record(step_s=t_done - t_ready,
-                                  data_s=t_ready - t_prev)
-            t_prev = t_done
-            if log_every and i % log_every == 0:
-                log(f"step {i:5d} loss {losses[-1]:.4f} "
-                    f"({(t_done - t_ready) * 1e3:.0f} ms/it)")
-            self._maybe_checkpoint(i + 1, params, mom)
+        loss_series = self.telemetry.registry.series("loss")
+        it = prefetch(iter(batches), depth=self.prefetch_depth,
+                      tracer=tracer, metrics=self.telemetry.registry)
+        with tracer.span("engine.run", strategy=self.strategy.name,
+                         g=self.num_groups, steps=steps):
+            t_prev = timing.monotonic()
+            for i in range(steps):
+                with tracer.span("engine.data_wait", step=i):
+                    batch = next(it, _END)
+                if batch is _END:
+                    break
+                t_ready = timing.monotonic()
+                b = jax.tree.leaves(batch)[0].shape[0]
+                built = self._built_step(
+                    self.strategy, g=self.num_groups, lr=self.lr,
+                    momentum=self.momentum,
+                    per_group_batch=self._per_group_batch(self.num_groups,
+                                                          b))
+                self._annotate_buckets(built, params)
+                with tracer.span("engine.step", step=i, mode=built.mode):
+                    with tracer.span("engine.dispatch"):
+                        params, mom, loss = built(params, mom, batch)
+                    with tracer.span("engine.block_until_ready"):
+                        # syncs: step wall ends here
+                        losses.append(float(loss))
+                t_done = timing.monotonic()
+                self.telemetry.record(step_s=t_done - t_ready,
+                                      data_s=t_ready - t_prev)
+                loss_series.append(losses[-1], step=i)
+                t_prev = t_done
+                if log_every and i % log_every == 0:
+                    log(f"step {i:5d} loss {losses[-1]:.4f} "
+                        f"({(t_done - t_ready) * 1e3:.0f} ms/it)")
+                self._maybe_checkpoint(i + 1, params, mom)
         return params, mom, losses
 
     def replay(self, params, batches, *, steps: Optional[int] = None):
@@ -275,10 +333,21 @@ class Engine:
         if len(trace) == 0:
             raise ValueError("trace has no commits to replay "
                              f"(after truncation to {steps})")
-        t0 = timing.monotonic()
-        final, losses, _ = self.strategy.replay(self, params, batches,
-                                                trace=trace)
-        self.telemetry.record(step_s=timing.monotonic() - t0)
+        # staleness-depth stream: the per-commit read-to-commit distance
+        # the replay executes — the asynchrony the trace view renders
+        reg = self.telemetry.registry
+        stale = reg.series("staleness")
+        for t, s in enumerate(trace.staleness):
+            stale.append(float(s), step=t)
+        reg.gauge("replay_max_staleness").set(trace.max_staleness)
+        reg.counter("replay_commits").inc(len(trace))
+        with self.tracer.span("engine.replay", commits=len(trace),
+                              impl=self.replay_impl,
+                              num_groups=trace.num_groups):
+            t0 = timing.monotonic()
+            final, losses, _ = self.strategy.replay(self, params, batches,
+                                                    trace=trace)
+            self.telemetry.record(step_s=timing.monotonic() - t0)
         return final, np.asarray(losses)
 
     def _run_replay(self, params, mom, batches, *, steps, log_every, log):
@@ -314,8 +383,10 @@ class Engine:
         if step_no % self.checkpoint_every:
             return
         from repro.checkpoint import checkpointing as CK   # lazy
-        CK.save(f"{self.checkpoint_dir}/ckpt_{step_no:07d}",
-                {"params": params, "mom": mom}, step=step_no)
+        with self.tracer.span("engine.checkpoint", step=step_no):
+            CK.save(f"{self.checkpoint_dir}/ckpt_{step_no:07d}",
+                    {"params": params, "mom": mom}, step=step_no)
+        self.telemetry.registry.counter("checkpoints").inc()
 
     # ------------------------------------------------------------------
     # Algorithm-1 Runner protocol

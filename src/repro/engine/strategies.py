@@ -113,31 +113,37 @@ class GroupedStrategy(Strategy):
     update = "fused"
 
     def build_step(self, engine, *, g, lr, momentum, per_group_batch, donate):
-        mode, k, mesh = engine._resolve_exec(g, per_group_batch)
-        weights = engine._weights_for(g)
-        sizes = engine._sizes_for(g)
-        common = dict(lr=lr, momentum=momentum,
-                      weight_decay=engine.weight_decay,
-                      strategy=self.update, head_filter=engine.head_filter,
-                      group_weights=weights, update_impl=engine.update_impl,
-                      interpret=engine.interpret)
-        if mode == "spmd":
-            raw = make_spmd_grouped_step(engine.loss_fn, mesh,
-                                         bucket_bytes=engine.bucket_bytes,
-                                         **common)
-        elif mode == "reference":
-            raw = make_reference_grouped_step(engine.loss_fn, g, k, **common)
-        else:
-            raw = make_grouped_train_step(engine.loss_fn, num_groups=g,
-                                          **common)
+        with engine.tracer.span("engine.build_step", strategy=self.name,
+                                g=g) as sp:
+            mode, k, mesh = engine._resolve_exec(g, per_group_batch)
+            sp.set(mode=mode, k=k)
+            weights = engine._weights_for(g)
+            sizes = engine._sizes_for(g)
+            common = dict(lr=lr, momentum=momentum,
+                          weight_decay=engine.weight_decay,
+                          strategy=self.update,
+                          head_filter=engine.head_filter,
+                          group_weights=weights,
+                          update_impl=engine.update_impl,
+                          interpret=engine.interpret)
+            if mode == "spmd":
+                raw = make_spmd_grouped_step(engine.loss_fn, mesh,
+                                             bucket_bytes=engine.bucket_bytes,
+                                             **common)
+            elif mode == "reference":
+                raw = make_reference_grouped_step(engine.loss_fn, g, k,
+                                                  **common)
+            else:
+                raw = make_grouped_train_step(engine.loss_fn, num_groups=g,
+                                              **common)
 
-        def prepare(batch):
-            gb = group_batch_split(batch, g, sizes=sizes)
-            if mode in ("spmd", "reference"):
-                gb = device_batch_split(gb, k)
-            return gb
+            def prepare(batch):
+                gb = group_batch_split(batch, g, sizes=sizes)
+                if mode in ("spmd", "reference"):
+                    gb = device_batch_split(gb, k)
+                return gb
 
-        fn = jax.jit(raw, donate_argnums=(0, 1) if donate else ())
+            fn = jax.jit(raw, donate_argnums=(0, 1) if donate else ())
         return _BuiltStep(fn, raw, prepare, mode, g, k, donating=donate)
 
     def run_stacked(self, engine, params, batches, *, g, lr, momentum):

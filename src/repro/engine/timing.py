@@ -8,17 +8,25 @@ step. ``Telemetry`` separates the two: ``data_s`` is the time the loop
 spent waiting for the next batch, ``step_s`` the dispatch-to-sync time of
 the device step itself.
 
-The step-time stream is what the cluster subsystem calibrates from:
-``Telemetry.throughput()`` is the black-box examples/s measurement that
-``cluster.devices`` turns into a measured ``DeviceSpec`` (see
-``spec_from_telemetry``), closing the loop between the engine and the
-time-to-convergence planner.
+``Telemetry`` is a thin facade over ``repro.obs.metrics.MetricRegistry``:
+``record()`` appends to the registry's ``step_s`` / ``data_wait_s``
+series (the same stream ``train.py --metrics-out`` sinks to JSONL and
+``obs.chrome_trace`` plots), and the legacy accessors (``step_s``,
+``median_step_s``, ``throughput``, ``summary``) read straight out of it —
+one stream, two views. The step-time stream is what the cluster
+subsystem calibrates from: ``Telemetry.throughput()`` is the black-box
+examples/s measurement that ``cluster.devices`` turns into a measured
+``DeviceSpec`` (see ``spec_from_telemetry``); its ``window`` argument
+restricts the estimate to the most recent steps — the time-varying
+recalibration hook online ``rebalance()`` consumes.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from typing import Callable, List, Optional, Sequence
+
+from repro.obs.metrics import MetricRegistry
 
 
 def monotonic() -> float:
@@ -67,58 +75,90 @@ def probe(fn: Callable[[], object], *, warmup: int = 1,
     """Time ``fn()`` (blocking on its result) ``iters`` times after
     ``warmup`` untimed calls that absorb jit compilation. The repo's one
     measurement primitive: benchmarks/_timeit and the conv-tile autotuner
-    both delegate here."""
+    both delegate here. Emits one ``timing.probe`` span (attrs carry the
+    resulting stats) when a tracer is installed; the span wraps the whole
+    probe so the timed region itself is untouched."""
     import jax
-    for _ in range(warmup):
-        jax.block_until_ready(fn())
-    samples = []
-    for _ in range(iters):
-        t0 = monotonic()
-        jax.block_until_ready(fn())
-        samples.append(monotonic() - t0)
-    return stats_of(samples)
+
+    from repro.obs import spans
+    with spans.span("timing.probe", warmup=warmup, iters=iters) as sp:
+        for _ in range(warmup):
+            jax.block_until_ready(fn())
+        samples = []
+        for _ in range(iters):
+            t0 = monotonic()
+            jax.block_until_ready(fn())
+            samples.append(monotonic() - t0)
+        stats = stats_of(samples)
+        sp.set(min_us=stats.min_s * 1e6, median_us=stats.median_s * 1e6)
+    return stats
 
 
 class Telemetry:
-    """Per-step wall-clock record of an engine run.
+    """Per-step wall-clock record of an engine run — a facade over an
+    ``obs.metrics.MetricRegistry`` (module docstring).
 
-    ``record(step_s, data_s)`` appends one step. The first ``skip`` steps
+    ``record(step_s, data_s)`` appends one step to the registry's
+    ``step_s`` / ``data_wait_s`` series. The first ``skip`` steps
     (default 1) are excluded from the aggregate statistics — they absorb
     jit compilation, which the old one-span ``time.time()`` measurements
     conflated with steady-state execution.
     """
 
-    def __init__(self, skip: int = 1):
+    def __init__(self, skip: int = 1,
+                 registry: Optional[MetricRegistry] = None):
         if skip < 0:
             raise ValueError("skip must be >= 0")
         self.skip = skip
-        self.step_s: List[float] = []
-        self.data_s: List[float] = []
-        self.notes: List[str] = []
+        self.registry = registry if registry is not None else MetricRegistry()
+        self._step = self.registry.series("step_s")
+        self._data = self.registry.series("data_wait_s")
+
+    @property
+    def step_s(self) -> List[float]:
+        """Per-step device wall times (live view of the registry series)."""
+        return self._step.values
+
+    @property
+    def data_s(self) -> List[float]:
+        """Per-step host data waits (live view of the registry series)."""
+        return self._data.values
+
+    @property
+    def notes(self) -> List[str]:
+        return self.registry.notes
 
     def note(self, msg: str) -> None:
         """Record a configuration observation (e.g. stranded devices when
         the chosen data-parallel width leaves slots idle). Deduplicated —
         resolution decisions repeat every built step."""
-        if msg not in self.notes:
-            self.notes.append(str(msg))
+        self.registry.note(msg)
 
     def __len__(self) -> int:
-        return len(self.step_s)
+        return len(self._step)
 
     def record(self, step_s: float, data_s: float = 0.0) -> None:
-        self.step_s.append(float(step_s))
-        self.data_s.append(float(data_s))
+        step = len(self._step)
+        self._step.append(float(step_s), step=step)
+        self._data.append(float(data_s), step=step)
 
-    def _steady(self) -> List[float]:
-        return self.step_s[self.skip:] if len(self.step_s) > self.skip \
-            else self.step_s
+    def _steady(self, window: Optional[int] = None) -> List[float]:
+        vals = self._step.values
+        steady = vals[self.skip:] if len(vals) > self.skip else list(vals)
+        if window is not None and window > 0:
+            steady = steady[-window:]
+        return steady
 
-    def median_step_s(self) -> float:
-        steady = sorted(self._steady())
+    def median_step_s(self, window: Optional[int] = None) -> float:
+        """Median steady step time — the interpolated ``stats_of`` median,
+        the same estimator every BENCH row and the planner calibration
+        use (the old ``sorted[n//2]`` upper-median disagreed with them on
+        even-length samples). ``window`` restricts to the most recent N
+        steady steps (drift-aware recalibration)."""
+        steady = self._steady(window)
         if not steady:
             raise ValueError("no steps recorded")
-        return steady[len(steady) // 2]
+        return stats_of(steady).median_s
 
     def mean_step_s(self) -> float:
         steady = self._steady()
@@ -126,25 +166,39 @@ class Telemetry:
             raise ValueError("no steps recorded")
         return sum(steady) / len(steady)
 
-    def stats(self) -> TimeStats:
+    def stats(self, window: Optional[int] = None) -> TimeStats:
         """min/median/IQR over the steady-state step times (``skip``
         applied) — what the BENCH_*.json emitters record."""
-        return stats_of(self._steady())
+        steady = self._steady(window)
+        if not steady:
+            raise ValueError("no steps recorded")
+        return stats_of(steady)
 
-    def throughput(self, batch_size: int) -> float:
+    def throughput(self, batch_size: int,
+                   window: Optional[int] = None) -> float:
         """Black-box examples/s over the steady-state steps — the number
-        ``cluster.devices`` / the planner calibrate from."""
+        ``cluster.devices`` / the planner calibrate from. ``window``
+        estimates from only the last N steps (time-varying clusters)."""
         if batch_size < 1:
             raise ValueError("batch_size must be >= 1")
-        return batch_size / self.median_step_s()
+        return batch_size / self.median_step_s(window)
+
+    def drift(self, window: int) -> float:
+        """Recent-to-overall median step-time ratio: > 1 means the run is
+        slowing down (straggler, thermal, contention), < 1 speeding up.
+        The scalar trigger for online re-planning (ROADMAP item 3)."""
+        if window < 1:
+            raise ValueError("window must be >= 1")
+        return self.median_step_s(window) / self.median_step_s()
 
     def summary(self, batch_size: Optional[int] = None) -> dict:
+        data = self._data.values
         out = {
-            "steps": len(self.step_s),
+            "steps": len(self._step),
             "median_step_ms": self.median_step_s() * 1e3,
             "mean_step_ms": self.mean_step_s() * 1e3,
-            "data_wait_ms": (sum(self.data_s[self.skip:])
-                             / max(1, len(self.data_s) - self.skip)) * 1e3,
+            "data_wait_ms": (sum(data[self.skip:])
+                             / max(1, len(data) - self.skip)) * 1e3,
         }
         if batch_size is not None:
             out["examples_per_s"] = self.throughput(batch_size)

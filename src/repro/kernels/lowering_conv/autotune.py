@@ -121,12 +121,22 @@ def autotune_tiles(x_shape, w_shape, stride: int = 1, *,
             return jax.tree.map(jnp.sum, vjp(jnp.ones_like(y)))
         return jax.jit(fwd_bwd)
 
-    best, best_t = DEFAULT_TILES, float("inf")
-    for bp, rb in tile_candidates(x_shape, w_shape, stride,
-                                  budget_bytes=budget_bytes):
-        step = step_for(bp, rb)
-        stats = timing.probe(lambda: step(x, w), warmup=warmup, iters=iters)
-        if stats.min_s < best_t:
-            best, best_t = (bp, rb), stats.min_s
+    from repro.obs import spans
+    cands = tile_candidates(x_shape, w_shape, stride,
+                            budget_bytes=budget_bytes)
+    with spans.span("autotune.conv_tiles", candidates=len(cands),
+                    x_shape=tuple(x_shape), w_shape=tuple(w_shape),
+                    stride=stride) as outer:
+        best, best_t = DEFAULT_TILES, float("inf")
+        for bp, rb in cands:
+            step = step_for(bp, rb)
+            with spans.span("autotune.candidate", bp=bp, rb=rb) as sp:
+                stats = timing.probe(lambda: step(x, w), warmup=warmup,
+                                     iters=iters)
+                sp.set(min_us=stats.min_s * 1e6)
+            if stats.min_s < best_t:
+                best, best_t = (bp, rb), stats.min_s
+        outer.set(best_bp=best[0], best_rb=best[1],
+                  best_min_us=best_t * 1e6)
     _TILE_CACHE[ck] = (best, budget_bytes)
     return best

@@ -162,21 +162,58 @@ def main(argv=None):
                          "(overrides --groups)")
     ap.add_argument("--ckpt", type=str, default="")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics-out", type=str, default="",
+                    help="sink the run's metric stream (step_s, "
+                         "data_wait_s, h2d_s, loss, ...) to this JSONL "
+                         "file (schema: repro.obs.metrics)")
+    ap.add_argument("--trace-out", type=str, default="",
+                    help="export a Chrome trace-event JSON of the run's "
+                         "spans + metrics to this file (open in Perfetto)")
     args = ap.parse_args(argv)
     if args.plan and not args.cluster_spec:
         ap.error("--plan requires --cluster-spec")
     if args.conv_impl and args.arch not in C.CNN_CONFIGS:
         ap.error(f"--conv-impl applies to CNN archs "
                  f"({', '.join(sorted(C.CNN_CONFIGS))}), not {args.arch}")
+    if args.plan and args.replay_trace:
+        ap.error("--plan and --replay-trace are mutually exclusive "
+                 "(a replay executes a recorded schedule; there is "
+                 "nothing for the planner to allocate)")
 
+    # install a recording span tracer for the whole run (workload build,
+    # autotune probes, engine loop) iff a trace export was requested —
+    # otherwise every span below stays the shared no-op
+    from repro.obs import spans
+    with spans.maybe_traced(bool(args.trace_out)):
+        return _run(args)
+
+
+def _export_obs(args, engine, groups: int, event_trace=None) -> None:
+    """Sink the run's metric stream / Chrome trace when requested."""
+    if not (args.metrics_out or args.trace_out):
+        return
+    from repro.obs import export_chrome_trace, run_metadata
+    if args.metrics_out:
+        strategy = "trace-replay" if args.replay_trace else args.strategy
+        run = run_metadata(extra={"arch": args.arch, "groups": groups,
+                                  "batch": args.batch, "steps": args.steps,
+                                  "strategy": strategy})
+        n = engine.telemetry.registry.to_jsonl(args.metrics_out, run)
+        print(f"metrics -> {args.metrics_out} ({n} records)")
+    if args.trace_out:
+        tracer = engine.tracer if engine.tracer.enabled else None
+        n = export_chrome_trace(args.trace_out, tracer=tracer,
+                                metrics=engine.telemetry.registry,
+                                event_trace=event_trace)
+        print(f"chrome trace -> {args.trace_out} ({n} events; open at "
+              "https://ui.perfetto.dev)")
+
+
+def _run(args):
     name, params, loss_fn, data, head_filter, cfg = _build_workload(args)
     mom = init_momentum(params)
 
     if args.replay_trace:
-        if args.plan:
-            ap.error("--plan and --replay-trace are mutually exclusive "
-                     "(a replay executes a recorded schedule; there is "
-                     "nothing for the planner to allocate)")
         from repro.exec import EventTrace
         trace = EventTrace.load(args.replay_trace)
         engine = Engine(loss_fn, strategy="trace-replay", trace=trace,
@@ -197,6 +234,7 @@ def main(argv=None):
                                   log_every=10)
         print(f"final loss {np.mean(losses[-5:]):.4f} "
               f"(impl={args.replay_impl})")
+        _export_obs(args, engine, trace.num_groups, event_trace=t)
         return losses
 
     groups, group_weights, micro_sizes = args.groups, None, None
@@ -224,6 +262,7 @@ def main(argv=None):
     print(f"telemetry: {summary['median_step_ms']:.1f} ms/step median, "
           f"{summary['examples_per_s']:.0f} examples/s, "
           f"{summary['data_wait_ms']:.1f} ms/step host data wait")
+    _export_obs(args, engine, groups)
     if args.ckpt:
         print("checkpointed to", args.ckpt)
     return losses

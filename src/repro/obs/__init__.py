@@ -1,0 +1,21 @@
+"""Run-level observability: span tracing, typed metrics, Chrome-trace
+export, and the measured HE x SE decomposition (see
+docs/observability.md).
+
+- ``obs.spans``        nested thread-safe span tracer, zero-cost when off
+- ``obs.metrics``      counters/gauges/series + schema-validated JSONL
+- ``obs.chrome_trace`` spans + metrics + EventTraces -> Perfetto
+- ``obs.report``       recompute the planner's T(g,alloc) from a run
+- ``obs.meta``         run-environment stamp shared by bench emitters
+"""
+from repro.obs import spans
+from repro.obs.chrome_trace import chrome_trace, export_chrome_trace
+from repro.obs.meta import env_mismatches, run_metadata
+from repro.obs.metrics import (Counter, Gauge, MetricRegistry, Series,
+                               validate_jsonl, validate_record)
+from repro.obs.spans import NullTracer, Tracer
+
+# repro.obs.report (calibrated_plan / hexse_report) is imported lazily by
+# its consumers: importing it here would shadow its ``python -m`` entry
+# point (runpy double-import) and pull the cluster subsystem into every
+# ``import repro.obs``.

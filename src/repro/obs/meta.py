@@ -1,0 +1,62 @@
+"""Run-environment metadata — one stamp shared by every emitter.
+
+``run_metadata()`` captures the facts that make two timing measurements
+comparable (or not): jax/jaxlib versions, backend, device count and kind,
+the effective ``XLA_FLAGS``, and optionally the engine mesh shape. Every
+``BENCH_*.json`` emitter stamps it under ``"env"`` and the metrics-JSONL
+header carries it as the ``meta.run`` payload, so
+``benchmarks/compare.py --normalize`` can *refuse* to normalize across
+environments that differ structurally (different device pool, different
+jax) instead of silently absorbing the difference into the
+machine-speed factor.
+
+``STRICT_KEYS`` is the comparability contract: keys that must match for
+a cross-machine normalization to be meaningful. Host speed (CPU model,
+core count) deliberately is NOT in it — absorbing *that* is exactly what
+``--normalize`` is for.
+"""
+from __future__ import annotations
+
+import os
+import platform
+from typing import Optional, Sequence, Tuple
+
+#: env keys that must be equal for --normalize to compare two benches
+STRICT_KEYS = ("jax", "backend", "device_kind", "device_count")
+
+
+def run_metadata(mesh_shape: Optional[Sequence[int]] = None,
+                 extra: Optional[dict] = None) -> dict:
+    """Flat str->scalar dict (JSONL-header compatible) describing the
+    environment this process measures in."""
+    import jax
+    devs = jax.devices()
+    out = {
+        "jax": jax.__version__,
+        "jaxlib": getattr(__import__("jaxlib"), "__version__", "?"),
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "device_kind": devs[0].device_kind if devs else "none",
+        "xla_flags": os.environ.get("XLA_FLAGS", ""),
+        "python": platform.python_version(),
+        "machine": platform.machine(),
+    }
+    if mesh_shape is not None:
+        out["mesh_shape"] = "x".join(str(int(d)) for d in mesh_shape)
+    if extra:
+        out.update(extra)
+    return out
+
+
+def env_mismatches(base: Optional[dict], fresh: Optional[dict],
+                   keys: Sequence[str] = STRICT_KEYS
+                   ) -> Tuple[str, ...]:
+    """Strict-key differences between two ``run_metadata`` stamps, as
+    human-readable strings; empty when comparable. Stamps that are absent
+    (pre-observability baselines) compare as unknown-but-compatible —
+    refusing would brick the gate on every legacy file."""
+    if not base or not fresh:
+        return ()
+    return tuple(f"{k}: base={base[k]!r} fresh={fresh[k]!r}"
+                 for k in keys
+                 if k in base and k in fresh and base[k] != fresh[k])
