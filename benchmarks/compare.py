@@ -50,7 +50,7 @@ from repro.obs.meta import env_mismatches  # noqa: E402
 
 #: keys that identify a row inside a list (checked in order); values must
 #: be scalars. "bench"/"device_count" identify top-level sections.
-ID_KEYS = ("bench", "device_count", "g", "arch", "impl", "batch",
+ID_KEYS = ("bench", "device_count", "g", "mp", "arch", "impl", "batch",
            "bucket_bytes", "buckets", "mode", "name", "variant")
 
 STATS_KEYS = {"min_us", "median_us", "iqr_us"}

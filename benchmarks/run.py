@@ -469,8 +469,25 @@ def _engine_probe(gs=(1, 2, 4, 8)):
                     "variant": "wholetree" if bb == 0 else "bucketed",
                     "step": s.row(),
                     "speedup_vs_wholetree_min": base.min_s / s.min_s})
+    mp_rows = []
+    if jax.device_count() >= 8:
+        # model-parallel storage head-to-head: same g=2 grouped step with
+        # params/momentum stored whole (mp=1) vs mp-sharded over the third
+        # mesh axis (mp=2, in-step all-gather + grad slice). The delta is
+        # the price of storage sharding on a model that fits either way.
+        for mp in (1, 2):
+            eng = Engine(wl.loss_fn, strategy="grouped-fused", num_groups=2,
+                         mp=mp, lr=0.05, momentum=0.9, donate=False)
+            p, m = params, jax.tree.map(jnp.zeros_like, params)
+            for _ in range(12):
+                p, m, _ = eng.step(p, m, batch)
+            built = next(iter(eng._steps.values()))
+            mp_rows.append({"g": 2, "mp": mp, "k": built.k,
+                            "mode": built.mode,
+                            "step_us": eng.telemetry.median_step_s() * 1e6,
+                            "step": eng.telemetry.stats().row()})
     print(json.dumps({"device_count": jax.device_count(), "rows": rows,
-                      "overlap": overlap}))
+                      "overlap": overlap, "mp": mp_rows}))
 
 
 def bench_engine():
@@ -508,6 +525,9 @@ def bench_engine():
                  f"buckets={row['buckets']};"
                  f"speedup_vs_wholetree="
                  f"{row['speedup_vs_wholetree_min']:.2f}x")
+        for row in data.get("mp", []):
+            _row(f"engine_mp{row['mp']}_g{row['g']}",
+                 row["step"]["median_us"], f"k={row['k']}")
 
     out = {"bench": "engine", "env": run_metadata(),
            "workload": "mlp_classify(batch=64)",

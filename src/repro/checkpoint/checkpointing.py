@@ -1,5 +1,22 @@
 """Checkpointing: pytree save/restore (npz) + step metadata. The epoch-wise
-optimizer (Algorithm 1) checkpoints at every epoch boundary (paper §V-B)."""
+optimizer (Algorithm 1) checkpoints at every epoch boundary (paper §V-B).
+
+Naming contract: each leaf's npz key is its tree path, one escaped
+segment per path entry joined with "/". Segments escape "\\" and "/"
+(``_escape``), so a dict key containing "/" (or a str key that renders
+like a list index) can never alias another leaf's name — ``save``
+additionally asserts global uniqueness and fails loudly instead of
+letting np.savez keep the last write.
+
+Restore contract (mesh-sharded engines): each loaded array is
+materialized through the *target* leaf's sharding when it has one
+(``jax.device_put(arr, leaf.sharding)``), so resuming an mp-sharded
+Engine run places every shard back on its device instead of silently
+replicating on the default device (which would break donation and blow
+up memory at scale). Dtypes must match exactly unless
+``allow_cast=True`` — a silent cast can mask fp64-coefficient or
+bf16-master drift between the saved and the resuming run.
+"""
 from __future__ import annotations
 
 import json
@@ -10,12 +27,30 @@ import jax
 import numpy as np
 
 
+def _escape(segment: str) -> str:
+    """Escape a path segment so "/" joins cannot alias across segment
+    boundaries: backslash first, then the separator itself."""
+    return segment.replace("\\", "\\\\").replace("/", "\\/")
+
+
+def _leaf_names(flat):
+    """Escaped path-joined names for ``tree_flatten_with_path`` output
+    (one name per (path, leaf) pair, order preserved)."""
+    return ["/".join(_escape(str(getattr(p, "key", getattr(p, "idx", p))))
+                     for p in path)
+            for path, _ in flat]
+
+
 def _flatten_with_names(tree):
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    names = _leaf_names(flat)
     out = {}
-    for path, leaf in flat:
-        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                        for p in path)
+    for name, (path, leaf) in zip(names, flat):
+        if name in out:
+            raise ValueError(
+                f"checkpoint name collision: two leaves flatten to "
+                f"{name!r} — distinct tree paths must produce distinct "
+                "names (escaped-path contract, module doc)")
         out[name] = np.asarray(leaf)
     return out
 
@@ -29,21 +64,38 @@ def save(path, tree, *, step: int = 0, extra: Optional[dict] = None) -> None:
     path.with_suffix(".json").write_text(json.dumps(meta, indent=2))
 
 
-def restore(path, tree_like) -> Tuple[object, int]:
-    """Restore into the structure of ``tree_like``. Returns (tree, step)."""
+def restore(path, tree_like, *, allow_cast: bool = False) -> Tuple[object, int]:
+    """Restore into the structure of ``tree_like``. Returns (tree, step).
+
+    Each leaf keeps the target's placement: when the ``tree_like`` leaf
+    carries a ``.sharding`` (a live mesh-sharded array), the loaded value
+    is ``jax.device_put`` through it — shards land on their devices, not
+    replicated on the default device. Dtype mismatches raise unless
+    ``allow_cast=True`` (module doc).
+    """
     path = Path(path)
     data = np.load(path.with_suffix(".npz"))
     meta = json.loads(path.with_suffix(".json").read_text())
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+    names = _leaf_names(flat)
     leaves = []
-    for p, leaf in flat:
-        name = "/".join(str(getattr(e, "key", getattr(e, "idx", e)))
-                        for e in p)
+    for name, (p, leaf) in zip(names, flat):
         arr = data[name]
         if tuple(arr.shape) != tuple(leaf.shape):
             raise ValueError(f"shape mismatch for {name}: "
                              f"{arr.shape} vs {leaf.shape}")
-        leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+        if arr.dtype != leaf.dtype:
+            if not allow_cast:
+                raise ValueError(
+                    f"dtype mismatch for {name}: checkpoint has "
+                    f"{arr.dtype}, target expects {leaf.dtype} "
+                    "(pass allow_cast=True to cast explicitly)")
+            arr = arr.astype(leaf.dtype)
+        sharding = getattr(leaf, "sharding", None)
+        if sharding is not None:
+            leaves.append(jax.device_put(arr, sharding))
+        else:
+            leaves.append(jax.numpy.asarray(arr))
     return jax.tree_util.tree_unflatten(
         jax.tree.structure(tree_like), leaves), int(meta["step"])
 

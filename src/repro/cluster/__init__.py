@@ -10,7 +10,9 @@ from repro.cluster.devices import (DeviceSpec, WorkloadCost, get_device,
                                    profile_device, profiled_spec,
                                    register_device, spec_from_telemetry)
 from repro.cluster.planner import (Plan, best_allocation,
-                                   hetero_time_per_iteration, plan_for_g)
+                                   hetero_time_per_iteration,
+                                   mp_collective_time, mp_feasible,
+                                   plan_for_g, plan_for_g_mp)
 from repro.cluster.sim import simulate_hetero
 
 __all__ = [
@@ -18,6 +20,7 @@ __all__ = [
     "DeviceSpec", "WorkloadCost", "get_device", "list_devices",
     "parse_cluster_spec", "profile_device", "profiled_spec",
     "register_device", "spec_from_telemetry",
-    "Plan", "best_allocation", "hetero_time_per_iteration", "plan_for_g",
+    "Plan", "best_allocation", "hetero_time_per_iteration",
+    "mp_collective_time", "mp_feasible", "plan_for_g", "plan_for_g_mp",
     "simulate_hetero",
 ]

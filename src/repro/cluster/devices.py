@@ -31,6 +31,9 @@ class WorkloadCost:
     flops_per_example: float     # fwd+bwd FLOPs for ONE example
     bytes_per_example: float     # HBM/DRAM traffic for ONE example
     grad_bytes: float = 0.0      # gradient payload reduced within a group
+    state_bytes: float = 0.0     # resident params+optimizer bytes per model
+    #                              replica (the mp axis shards this: a worker
+    #                              of mp devices holds state_bytes/mp each)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,6 +50,9 @@ class DeviceSpec:
     mem_bw: float                # bytes/s
     net_bw: float                # bytes/s to the reduction / parameter server
     throughput: Optional[float] = None   # measured examples/s (black box)
+    mem_bytes: Optional[float] = None    # device memory capacity; None =
+    #                                      unconstrained (planner memory-
+    #                                      feasibility checks skip it)
 
     def predict_throughput(self, cost: Optional[WorkloadCost] = None) -> float:
         """Examples/s: the measurement if present, else the roofline."""
@@ -90,13 +96,17 @@ def list_devices() -> Tuple[str, ...]:
 
 
 register_device(DeviceSpec("cpu-c4.4xlarge", "cpu",
-                           peak_flops=0.45e12, mem_bw=60e9, net_bw=1.25e9))
+                           peak_flops=0.45e12, mem_bw=60e9, net_bw=1.25e9,
+                           mem_bytes=30e9))
 register_device(DeviceSpec("gpu-g2.2xlarge", "gpu",
-                           peak_flops=2.4e12, mem_bw=160e9, net_bw=1.25e9))
+                           peak_flops=2.4e12, mem_bw=160e9, net_bw=1.25e9,
+                           mem_bytes=4e9))
 register_device(DeviceSpec("gpu-titan-x", "gpu",
-                           peak_flops=6.6e12, mem_bw=336e9, net_bw=1.25e9))
+                           peak_flops=6.6e12, mem_bw=336e9, net_bw=1.25e9,
+                           mem_bytes=12e9))
 register_device(DeviceSpec("tpu-v5e", "tpu",
-                           peak_flops=197e12, mem_bw=819e9, net_bw=50e9))
+                           peak_flops=197e12, mem_bw=819e9, net_bw=50e9,
+                           mem_bytes=16e9))
 
 
 _SPEC_ITEM = re.compile(r"^(?:(\d+)x)?([A-Za-z0-9_.\-]+)$")

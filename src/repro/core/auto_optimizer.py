@@ -45,6 +45,8 @@ class OptimizerResult:
     eta: float
     decisions: List[Decision]
     losses: np.ndarray
+    mp: int = 1        # model-parallel width of the planned mesh (the
+    #                    engine's "mp" axis; from the planner Plan)
 
 
 def _final_loss(losses, tail: int = 50) -> float:
@@ -115,9 +117,17 @@ def algorithm1(runner: Runner, state, *, n_devices: int, epochs: int,
     ``cluster.planner.Plan`` — or anything with a ``.g`` — from the
     heterogeneous time-to-convergence search) > homogeneous ``phase_times``
     FC-saturation short-circuit > fully async (g = N).
+
+    A plan from the 2-D (g, mp) search carries a model-parallel width
+    ``plan.mp``; it is validated against the device budget (g*mp <= N),
+    passed through on the result (``OptimizerResult.mp``) and fixed for
+    the run — Algorithm 1 adapts g (the staleness axis) only, because mp
+    moves bytes, not gradients: SE is mp-invariant, so re-searching it
+    per epoch would spend probes on a statistically neutral knob.
     """
     decisions: List[Decision] = []
     all_losses: List[np.ndarray] = []
+    mp = int(getattr(plan, "mp", 1) or 1) if plan is not None else 1
 
     # --- cold start: synchronous scale-setting ---
     mu, eta, fl = cold_start(runner, state, probe_steps=probe_steps)
@@ -133,8 +143,9 @@ def algorithm1(runner: Runner, state, *, n_devices: int, epochs: int,
         g = g0
     elif plan is not None:
         g = int(plan.g)
-        if not 1 <= g <= n_devices:
-            raise ValueError(f"plan.g={g} infeasible for N={n_devices}")
+        if not 1 <= g * mp <= n_devices:
+            raise ValueError(f"plan (g={g}, mp={mp}) infeasible for "
+                             f"N={n_devices}")
     elif phase_times is not None:
         g = hm.smallest_saturating_g(n_devices, phase_times)
     else:
@@ -158,4 +169,4 @@ def algorithm1(runner: Runner, state, *, n_devices: int, epochs: int,
 
     return OptimizerResult(state=state, g=g, mu=mu, eta=eta,
                            decisions=decisions,
-                           losses=np.concatenate(all_losses))
+                           losses=np.concatenate(all_losses), mp=mp)

@@ -69,6 +69,14 @@ class Engine:
     overlapped bucketed gradient exchange (``engine.spmd``; 0 restores
     the legacy whole-tree gather).
 
+    ``mp`` adds a model-parallel axis to the SPMD mesh: each of the g
+    groups spends mp devices per worker on parameter/optimizer-state
+    shards (``sharding.rules.engine_param_specs``), so the device budget
+    becomes g*k*mp. ``sharding_rules`` optionally overrides the derived
+    PartitionSpecs with explicit ``(regex-path-window, spec)`` rules
+    (first match wins). Results stay bitwise equal to ``mp=1`` and to
+    the reference path (``engine.spmd`` module doc).
+
     ``tracer``: an ``obs.spans`` tracer recording the engine's phase
     spans (run / data_wait / dispatch / block_until_ready / checkpoint,
     plus per-bucket exchange annotations on the SPMD path). Defaults to
@@ -84,6 +92,7 @@ class Engine:
                  head_filter: Optional[Callable] = None,
                  update_impl: str = "xla", interpret: Optional[bool] = None,
                  exec_mode: str = "auto", num_devices: Optional[int] = None,
+                 mp: int = 1, sharding_rules=None,
                  donate: bool = True,
                  bucket_bytes: int = DEFAULT_BUCKET_BYTES,
                  sample_batches: Optional[Callable] = None,
@@ -110,6 +119,14 @@ class Engine:
         self.head_filter = head_filter
         self.update_impl, self.interpret = update_impl, interpret
         self.exec_mode, self.num_devices = exec_mode, num_devices
+        self.mp = int(mp)
+        if self.mp < 1:
+            raise ValueError(f"mp must be >= 1, got {mp}")
+        if self.mp > 1 and exec_mode == "vmap":
+            raise ValueError("exec_mode='vmap' has no model-parallel path; "
+                             "use exec_mode='spmd' (or 'auto') for mp > 1")
+        self.sharding_rules = (tuple(sharding_rules)
+                               if sharding_rules is not None else None)
         self.donate = donate
         self.bucket_bytes = int(bucket_bytes)
         self.sample_batches, self.batch_size = sample_batches, batch_size
@@ -148,32 +165,41 @@ class Engine:
         return global_batch // g
 
     def _resolve_exec(self, g: int, per_group_batch: int):
-        """-> (mode, k, mesh or None) for one g."""
+        """-> (mode, k, mesh or None) for one g. The device budget is
+        g*mp workers wide: each of the g groups spends mp devices per
+        worker on model-parallel shards, so k data-parallel slots per
+        group come out of n // (g * mp)."""
         n = self.num_devices if self.num_devices is not None \
             else jax.device_count()
+        mp = self.mp
         if self.exec_mode == "vmap":
             return "vmap", 1, None
         if self.exec_mode == "reference":
             # runs on ONE device; n (num_devices= or the visible pool) only
             # shapes the (g, k) shard structure being mirrored — stranding
-            # is not a real-hardware concern here, so no warning
+            # is not a real-hardware concern here, so no warning. mp only
+            # narrows k the same way it narrows the SPMD mesh (the
+            # reference is the bitwise target of the mp-sharded step, so
+            # the mirrored (g, k) must match).
             return ("reference",
-                    choose_data_parallel(per_group_batch, max(1, n // g),
-                                         warn=False),
+                    choose_data_parallel(per_group_batch,
+                                         max(1, n // (g * mp)), warn=False),
                     None)
-        k = choose_data_parallel(per_group_batch, n // g) if n >= g else 0
-        if self.exec_mode == "auto" and (n <= 1 or k < 1):
+        slots = n // (g * mp)
+        k = choose_data_parallel(per_group_batch, slots) if slots >= 1 else 0
+        if self.exec_mode == "auto" and mp == 1 and (n <= 1 or k < 1):
             return "vmap", 1, None
         if k < 1:
-            raise ValueError(f"exec_mode='spmd' needs >= {g} devices "
-                             f"(have {n})")
-        if k < n // g:
+            raise ValueError(
+                f"exec_mode={self.exec_mode!r} needs >= {g * mp} devices "
+                f"for g={g}, mp={mp} (have {n})")
+        if k < slots:
             self.telemetry.note(
-                f"stranded devices: g={g} uses k={k} of {n // g} "
+                f"stranded devices: g={g} mp={mp} uses k={k} of {slots} "
                 f"per-group device slots (per-group batch "
                 f"{per_group_batch} has no larger divisor)")
         from repro.launch.mesh import make_group_mesh
-        return "spmd", k, make_group_mesh(g, k)
+        return "spmd", k, make_group_mesh(g, k, mp)
 
     def _built_step(self, strategy: Strategy, *, g: int, lr: float,
                     momentum: float, per_group_batch: int):
@@ -203,9 +229,13 @@ class Engine:
         mode, k, _ = self._resolve_exec(
             g, per_group_batch if per_group_batch is not None
             else max(1, spec.group_size))
+        mesh_s = ""
+        if mode == "spmd":
+            mesh_s = (f"({g}x{k}x{self.mp} mesh)" if self.mp > 1
+                      else f"({g}x{k} mesh)")
         return (f"engine[{self.strategy.name}] g={g} S={spec.staleness} "
                 f"mu_implicit={spec.implicit_momentum:.3f} "
-                f"exec={mode}" + (f"({g}x{k} mesh)" if mode == "spmd" else ""))
+                f"exec={mode}" + mesh_s)
 
     # ------------------------------------------------------------------
     # per-round step

@@ -1,12 +1,29 @@
 """Mesh-sharded grouped step — the paper's compute groups as real SPMD.
 
-The mesh is a ``("group", "data")`` split of the device pool: g groups of
-k devices each (``launch.mesh.make_group_mesh``). The global batch is
-sharded over both axes, every device computes the gradient of its own
-microbatch shard, and the per-group gradient is the mean of the group's k
-shard gradients — synchronous data parallelism *within* a group, the
+The mesh is a ``("group", "data", "mp")`` split of the device pool:
+g groups of k workers of mp model-parallel devices each
+(``launch.mesh.make_group_mesh``). The global batch is sharded over the
+first two axes, every worker computes the gradient of its own microbatch
+shard, and the per-group gradient is the mean of the group's k shard
+gradients — synchronous data parallelism *within* a group, the
 round-robin staleness-0..g-1 grouped update *across* groups (applied
 replicated on every device, so parameters never diverge).
+
+Model-parallel storage (``mp > 1``): parameters and momentum are STORED
+sharded over the "mp" axis per the PartitionSpecs of
+``sharding.rules.engine_param_specs`` (explicit regex rules →
+TENSOR_PREF name table → auto-derived trailing divisible dim). The
+compute itself stays full-parameter: each device ``all_gather``s the
+full parameters from the mp shards (tiled — pure data movement, so the
+gathered bits equal the unsharded bits), runs forward/backward on its
+microbatch (replicated across mp), then slices the gradient back to its
+own mp shard before the exchange. The grouped update is elementwise, so
+updating the local shard with the shard of the gradient is bitwise the
+shard of the full update — which is how sharded ≡ unsharded stays a
+BITWISE identity (pinned by tests/test_engine.py at
+(g, mp) ∈ {1,2} × {1,2}). Data/group collectives carry 1/mp of the
+gradient bytes; ``mp == 1`` traces the exact pre-mp graph (no gather,
+no slice, replicated ``P()`` specs).
 
 Reproducibility contract (pinned by ``tests/test_engine.py``): the
 cross-device combination uses ``all_gather`` + a *local* mean on every
@@ -133,22 +150,34 @@ def make_spmd_grouped_step(loss_fn: Callable, mesh: Mesh, *, lr: float,
                            group_weights: Optional[Sequence[float]] = None,
                            update_impl: str = "xla",
                            interpret: Optional[bool] = None,
-                           bucket_bytes: int = DEFAULT_BUCKET_BYTES):
+                           bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+                           sharding_rules=None):
     """Build the mesh-sharded ``step(params, mom, device_batch)``.
 
     ``device_batch`` leaves carry a leading (g, k, b/k) layout
-    (``device_batch_split``); params/momentum enter replicated and leave
-    replicated — the grouped update runs identically on every device from
-    the all-gathered (g, ...) gradient stack. Returns
+    (``device_batch_split``); params/momentum enter replicated over
+    "group"/"data" (and, when the mesh carries an "mp" axis wider than 1,
+    sharded over "mp" per ``sharding.rules.engine_param_specs``) and
+    leave the same way — the grouped update runs identically on every
+    worker from the all-gathered (g, ...) gradient stack. Returns
     ``(params, mom, losses)`` with ``losses`` the (g, k) per-shard loss
     array — the scalar mean is taken on the host (deterministic float64)
     so the reported loss bit-matches the reference path too, instead of
     depending on how XLA fuses the final reduction.
 
     ``bucket_bytes``: slab size target of the overlapped bucketed
-    exchange (module doc); 0 selects the legacy whole-tree arm.
+    exchange (module doc); 0 selects the legacy whole-tree arm. With
+    ``mp > 1`` the buckets pack the LOCAL gradient shards (slab bytes =
+    local shard bytes) and the donation tie is computed from those raw
+    local slabs, so the in-place update of the donated shard buffers
+    stays ordered against the backward pass.
+
+    ``sharding_rules``: optional explicit ``(regex-path-window, spec)``
+    rules forwarded to ``engine_param_specs`` (first match wins; the
+    TENSOR_PREF table and auto-derivation cover unmatched leaves).
     """
     g, k = mesh.shape["group"], mesh.shape["data"]
+    mp = int(mesh.shape.get("mp", 1))
     bucket_bytes = int(bucket_bytes)
     if strategy == "fused":
         coeffs = grouped_coeffs(g, lr=lr, momentum=momentum,
@@ -162,10 +191,49 @@ def make_spmd_grouped_step(loss_fn: Callable, mesh: Mesh, *, lr: float,
 
     def step(params, mom_buf, dbatch):
         head_mask = head_mask_tree(params, head_filter)
+        tdef = jax.tree.structure(params)
+        if mp > 1:
+            from repro.sharding.rules import engine_param_specs, spec_mp_dim
+            pspecs = engine_param_specs(params, mesh, rules=sharding_rules)
+            mp_dims = [spec_mp_dim(s, "mp") for s in
+                       jax.tree.leaves(pspecs,
+                                       is_leaf=lambda x: isinstance(x, P))]
+            param_specs = pspecs
+        else:
+            mp_dims = None
+            param_specs = P()
 
         def shard_fn(p, v, bt):
             local = jax.tree.map(lambda t: t[0, 0], bt)   # this device's shard
-            loss, grad = jax.value_and_grad(loss_fn)(p, local)
+            if mp > 1:
+                # gather the full parameters from the mp shards: tiled
+                # all_gather is pure data movement, so the gathered leaf
+                # is bit-identical to the unsharded one (module doc)
+                full_p = jax.tree.unflatten(tdef, [
+                    t if d is None else
+                    jax.lax.all_gather(t, "mp", axis=d, tiled=True)
+                    for t, d in zip(jax.tree.leaves(p), mp_dims)])
+            else:
+                full_p = p
+            loss, grad = jax.value_and_grad(loss_fn)(full_p, local)
+            if mp > 1:
+                # slice the full-parameter gradient back to this device's
+                # mp shard; everything downstream (mean over "data",
+                # stack over "group", elementwise update) commutes with
+                # the slice, so the updated shard is bitwise the shard of
+                # the full update
+                i_mp = jax.lax.axis_index("mp")
+
+                def to_shard(t, d):
+                    if d is None:
+                        return t
+                    size = t.shape[d] // mp
+                    return jax.lax.dynamic_slice_in_dim(
+                        t, i_mp * size, size, axis=d)
+
+                grad = jax.tree.unflatten(tdef, [
+                    to_shard(t, d)
+                    for t, d in zip(jax.tree.leaves(grad), mp_dims)])
             # one collective for the loss board: a single gather over both
             # mesh axes reshapes bit-identically to the old nested
             # all_gather("data") + all_gather("group") pair
@@ -246,10 +314,11 @@ def make_spmd_grouped_step(loss_fn: Callable, mesh: Mesh, *, lr: float,
 
         return shard_map(
             shard_fn, mesh=mesh, check_rep=False,
-            in_specs=(P(), P(), P("group", "data")),
-            out_specs=(P(), P(), P()))(params, mom_buf, dbatch)
+            in_specs=(param_specs, param_specs, P("group", "data")),
+            out_specs=(param_specs, param_specs, P()))(params, mom_buf,
+                                                       dbatch)
 
-    step.mesh_shape = (g, k)
+    step.mesh_shape = (g, k, mp)
     step.bucket_bytes = bucket_bytes
     return step
 
@@ -290,11 +359,13 @@ def make_reference_grouped_step(loss_fn: Callable, g: int, k: int, *,
     return step
 
 
-def group_mesh_devices(g: int, k: int):
-    """The first g*k local devices as a (g, k) array for mesh construction."""
+def group_mesh_devices(g: int, k: int, mp: int = 1):
+    """The first g*k*mp local devices as a (g, k, mp) array for mesh
+    construction (``launch.mesh.make_group_mesh``)."""
+    n = g * k * mp
     devs = jax.devices()
-    if len(devs) < g * k:
-        raise ValueError(f"need {g * k} devices for a ({g},{k}) group mesh; "
-                         f"have {len(devs)} (set XLA_FLAGS="
+    if len(devs) < n:
+        raise ValueError(f"need {n} devices for a ({g},{k},{mp}) group "
+                         f"mesh; have {len(devs)} (set XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N on CPU)")
-    return np.array(devs[:g * k]).reshape(g, k)
+    return np.array(devs[:n]).reshape(g, k, mp)

@@ -129,6 +129,7 @@ class GroupedStrategy(Strategy):
             if mode == "spmd":
                 raw = make_spmd_grouped_step(engine.loss_fn, mesh,
                                              bucket_bytes=engine.bucket_bytes,
+                                             sharding_rules=engine.sharding_rules,
                                              **common)
             elif mode == "reference":
                 raw = make_reference_grouped_step(engine.loss_fn, g, k,

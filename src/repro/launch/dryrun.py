@@ -1,5 +1,12 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys
+# Forced host device pool, set before jax initializes its backend: 8 for the
+# --host-smoke CI lane (matches the tier-1 test pool), 512 for production
+# dry-runs. An externally provided XLA_FLAGS (test harness subprocess) wins.
+os.environ.setdefault(
+    "XLA_FLAGS",
+    "--xla_force_host_platform_device_count="
+    + ("8" if "--host-smoke" in sys.argv[1:] else "512"))
 
 """Multi-pod dry-run (deliverable e): lower + compile every
 (architecture x input-shape x mesh) combination with ShapeDtypeStruct
@@ -9,7 +16,16 @@ the collective schedule for the roofline (EXPERIMENTS.md §Dry-run/§Roofline).
 Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only]
+  PYTHONPATH=src python -m repro.launch.dryrun --host-smoke
 Results: experiments/dryrun/<arch>__<shape>__<mesh>.json
+
+--host-smoke is the CI regression lane for the big configs: it lowers AND
+compiles the 405B-class architectures through the canonical
+("group","data","mp") mesh on 8 forced host devices (no allocation —
+AOT compile over ShapeDtypeStructs) and fails on HLO/memory-model
+regressions: a compile error, params that stopped sharding over the mp
+axis, a vanished collective schedule, or per-device argument bytes
+blowing past the sharded-state memory model.
 """
 import argparse          # noqa: E402
 import json              # noqa: E402
@@ -172,6 +188,155 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool,
     return res
 
 
+# Big configs exercised by the CI host-smoke lane (dense 405B-class, MoE,
+# SSM — one per memory-model family).
+HOST_SMOKE_ARCHS = ("llama3-405b", "qwen2-moe-a2.7b", "mamba2-2.7b")
+
+
+def host_smoke_one(arch: str, *, groups: int = 1, data: int = 4, mp: int = 2,
+                   seq_len: int = 128, batch: int = 8, verbose: bool = True):
+    """Lower + compile ``arch``'s full train step through the canonical
+    ("group","data","mp") mesh on forced host devices, then check the
+    memory model and HLO still behave. Returns a result dict; raises
+    AssertionError / compile errors on regression.
+
+    Checks (the "fails on HLO/memory-model regressions" contract):
+      * lower + AOT compile succeed on the engine-canonical mesh;
+      * when mp > 1, at least one param leaf is sharded over "mp";
+      * compiled per-device argument bytes respect the sharded-state
+        memory model: <= state_bytes / (data*mp) * 1.3 + 1 GiB slack
+        (a replication regression inflates this by ~data*mp and trips);
+      * the HLO still contains a collective schedule (sharded params on
+        a multi-device mesh must communicate; zero collectives means the
+        partitioner silently stopped sharding).
+    """
+    from repro.configs.base import InputShape
+    from repro.launch.mesh import make_host_smoke_mesh
+
+    n_dev = jax.device_count()
+    need = groups * data * mp
+    if need > n_dev:
+        raise ValueError(f"host-smoke mesh {groups}x{data}x{mp} needs {need} "
+                         f"devices, have {n_dev}")
+    cfg = get_config(arch)
+    shape = InputShape("hostsmoke", seq_len, batch, "train")
+    mesh = make_host_smoke_mesh(data=data, mp=mp, groups=groups)
+    tc = TrainConfig(grad_accum=1)
+
+    pspecs = ST.params_specs(cfg)
+    p_shard = SH.params_shardings(pspecs, cfg, mesh)
+    bspecs = ST.batch_specs(cfg, shape, grad_accum=1)
+    b_shard = SH.batch_shardings(bspecs, mesh)
+    t0 = time.time()
+    with mesh, SH.activation_sharding(mesh):
+        mspecs = jax.eval_shape(
+            lambda p: jax.tree.map(
+                lambda x: jnp.zeros(x.shape, cfg.dtype("mom")), p), pspecs)
+        m_shard = SH.params_shardings(mspecs, cfg, mesh)
+        step = ST.make_train_step(cfg, tc, shape, grad_shardings=p_shard)
+        lowered = jax.jit(
+            step,
+            in_shardings=(p_shard, m_shard, b_shard),
+            out_shardings=(p_shard, m_shard, SH.replicated(mesh)),
+        ).lower(pspecs, mspecs, bspecs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    # --- HLO sanity: the mp axis must actually shard parameter storage ---
+    def _axes(spec):
+        out = set()
+        for entry in tuple(spec):
+            for a in (entry if isinstance(entry, tuple) else (entry,)):
+                if a is not None:
+                    out.add(a)
+        return out
+
+    shardings = jax.tree.leaves(
+        p_shard, is_leaf=lambda x: hasattr(x, "spec"))
+    mp_leaves = sum(1 for s in shardings if "mp" in _axes(s.spec))
+    if mp > 1:
+        assert mp_leaves > 0, (
+            f"{arch}: no param leaf is sharded over the 'mp' axis — the "
+            "mesh/rules unification regressed (rules.default_axes)")
+
+    # --- memory model: arguments must be state-sharded, not replicated ---
+    ma = compiled.memory_analysis()
+    pbytes = param_bytes(pspecs)
+    import math
+    mom_bytes = float(sum(
+        jnp.zeros((), l.dtype).itemsize * math.prod(l.shape)
+        for l in jax.tree.leaves(mspecs)))
+    state_bytes = pbytes + mom_bytes
+    arg_bound = state_bytes / (data * mp) * 1.3 + 2.0**30
+    assert ma.argument_size_in_bytes <= arg_bound, (
+        f"{arch}: per-device argument bytes "
+        f"{ma.argument_size_in_bytes/2**30:.1f} GiB exceed the sharded-state "
+        f"model bound {arg_bound/2**30:.1f} GiB "
+        f"(state {state_bytes/2**30:.1f} GiB over data*mp={data*mp}) — "
+        "parameters or momentum replicated?")
+
+    from repro.launch.hlo_parse import analyze_module
+    stats = analyze_module(compiled.as_text())
+    n_coll = int(sum(stats.collective_counts.values()))
+    if need > 1:
+        assert n_coll > 0, (
+            f"{arch}: compiled HLO has no collectives on a {need}-device "
+            "mesh — partitioner silently stopped sharding")
+
+    res = {
+        "arch": arch, "shape": "hostsmoke", "status": "ok",
+        "mesh": f"{groups}x{data}x{mp}", "mesh_axes": list(mesh.axis_names),
+        "chips": need, "seq_len": seq_len, "global_batch": batch,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "params_total": param_count(pspecs),
+        "state_bytes_global": state_bytes,
+        "mp_sharded_param_leaves": mp_leaves,
+        "param_leaves": len(shardings),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "argument_bound_bytes": arg_bound,
+        },
+        "collectives": {"bytes": stats.collective_bytes,
+                        "count": stats.collective_counts},
+    }
+    if verbose:
+        print(f"[host-smoke {res['mesh']}] {arch}: "
+              f"lower {res['lower_s']}s, compile {res['compile_s']}s, "
+              f"args/dev {ma.argument_size_in_bytes/2**30:.1f} GiB "
+              f"(bound {arg_bound/2**30:.1f}), "
+              f"mp-sharded leaves {mp_leaves}/{len(shardings)}, "
+              f"collectives {n_coll}")
+    return res
+
+
+def run_host_smoke(args):
+    """CLI driver for --host-smoke: run every HOST_SMOKE_ARCHS config (or
+    just --arch), write JSON next to the production dry-run artifacts,
+    exit non-zero on any regression."""
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    archs = [args.arch] if args.arch else list(HOST_SMOKE_ARCHS)
+    failures = []
+    for arch in archs:
+        tag = f"{arch}__hostsmoke__{args.smoke_g}x{args.smoke_data}x{args.smoke_mp}"
+        try:
+            res = host_smoke_one(arch, groups=args.smoke_g,
+                                 data=args.smoke_data, mp=args.smoke_mp)
+        except Exception as e:
+            traceback.print_exc()
+            res = {"arch": arch, "shape": "hostsmoke", "status": "FAILED",
+                   "mesh": f"{args.smoke_g}x{args.smoke_data}x{args.smoke_mp}",
+                   "error": str(e)[-2000:]}
+            failures.append(tag)
+        (OUT_DIR / f"{tag}.json").write_text(json.dumps(res, indent=2))
+    if failures:
+        print("HOST-SMOKE FAILURES:", failures)
+        raise SystemExit(1)
+    print(f"host-smoke OK ({len(archs)} configs)")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=list_archs())
@@ -188,7 +353,21 @@ def main():
                     help="weight-stationary decode variant")
     ap.add_argument("--tag", type=str, default="",
                     help="variant tag appended to the output filename")
+    ap.add_argument("--host-smoke", action="store_true",
+                    help="CI lane: compile the big configs on a forced "
+                         "8-host-device ('group','data','mp') mesh and fail "
+                         "on HLO/memory-model regressions")
+    ap.add_argument("--smoke-g", type=int, default=1,
+                    help="host-smoke mesh: compute groups")
+    ap.add_argument("--smoke-data", type=int, default=4,
+                    help="host-smoke mesh: data-parallel width")
+    ap.add_argument("--smoke-mp", type=int, default=2,
+                    help="host-smoke mesh: model-parallel width")
     args = ap.parse_args()
+
+    if args.host_smoke:
+        run_host_smoke(args)
+        return
 
     OUT_DIR.mkdir(parents=True, exist_ok=True)
     archs = list_archs() if args.all or not args.arch else [args.arch]

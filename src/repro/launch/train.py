@@ -82,9 +82,11 @@ def _plan(args, params, cfg):
     tokens = args.seq if hasattr(cfg, "vocab_size") else 1
     # rough roofline: ~6*P FLOPs per token fwd+bwd, one param sweep of
     # memory traffic per example, fp32 gradient payload
+    # fp32 params + fp32 momentum resident per model replica
     cost = cluster.WorkloadCost(flops_per_example=6.0 * n_params * tokens,
                                 bytes_per_example=4.0 * n_params,
-                                grad_bytes=4.0 * n_params)
+                                grad_bytes=4.0 * n_params,
+                                state_bytes=8.0 * n_params)
     # merged-FC phase ~ the head matmul on the full batch on the fastest
     # device (unembed for LMs, the FC stack for CNNs)
     if hasattr(cfg, "vocab_size"):
@@ -93,8 +95,13 @@ def _plan(args, params, cfg):
         head_flops = 6.0 * sum(int(np.prod(p["w"].shape))
                                for p in params["fc"])
     t_fc = args.batch * head_flops / max(d.peak_flops for d in devices)
+    # 2-D (g, mp) search: powers of two up to the smallest group's size;
+    # infeasible points (memory, group width) are skipped by the planner
+    n = len(devices)
+    mp_candidates = [m for m in (1, 2, 4, 8, 16) if m <= n]
     plan = cluster.best_allocation(devices, global_batch=args.batch,
-                                   t_fc=t_fc, cost=cost)
+                                   t_fc=t_fc, cost=cost,
+                                   mp_candidates=mp_candidates)
     print(plan.describe())
     return plan
 
@@ -111,6 +118,12 @@ def main(argv=None):
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--groups", type=int, default=1,
                     help="compute groups g (paper's execution strategy)")
+    ap.add_argument("--mp", type=int, default=1,
+                    help="model-parallel devices per worker: shards "
+                         "params/optimizer state over the mesh's 'mp' "
+                         "axis (sharding.rules.engine_param_specs); the "
+                         "device budget becomes groups*k*mp. --plan "
+                         "overrides this with the planner's (g, mp) pick")
     ap.add_argument("--lr", type=float, default=0.02)
     ap.add_argument("--momentum", type=float, default=0.9)
     ap.add_argument("--weight-decay", type=float, default=0.0)
@@ -237,18 +250,29 @@ def _run(args):
         _export_obs(args, engine, trace.num_groups, event_trace=t)
         return losses
 
-    groups, group_weights, micro_sizes = args.groups, None, None
+    groups, group_weights, micro_sizes, mp = args.groups, None, None, args.mp
     if args.plan:
         plan = _plan(args, params, cfg)
         groups, group_weights = plan.g, plan.weights
         micro_sizes = plan.allocation.microbatches
+        mp = plan.mp
+        # the plan's mp is sized for the --cluster-spec devices; when this
+        # process emulates the run on a smaller local pool (the smoke
+        # default: 1 host device), mp-sharded storage has no mesh to live
+        # on — store unsharded and keep the rest of the plan
+        if args.exec_mode == "auto" and mp > 1 \
+                and jax.device_count() < groups * mp:
+            print(f"plan chose mp={mp} for the cluster; local pool has "
+                  f"{jax.device_count()} device(s) < g*mp={groups * mp} — "
+                  "storing params unsharded here (mp=1)")
+            mp = 1
 
     engine = Engine(loss_fn, strategy=args.strategy, num_groups=groups,
                     lr=args.lr, momentum=args.momentum,
                     weight_decay=args.weight_decay,
                     group_weights=group_weights, micro_sizes=micro_sizes,
                     head_filter=head_filter, update_impl=args.update_impl,
-                    exec_mode=args.exec_mode,
+                    exec_mode=args.exec_mode, mp=mp,
                     **({"bucket_bytes": args.bucket_bytes}
                        if args.bucket_bytes is not None else {}),
                     checkpoint_dir=args.ckpt,

@@ -1,17 +1,33 @@
 """Logical sharding rules: param / batch / cache pytrees -> PartitionSpecs.
 
 Megatron/FSDP hybrid:
-  - tensor axis ("model"): preferred per-leaf dimension by param name
-    (attention heads, FFN hidden, vocab), falling back to the largest
-    divisible dim;
-  - fsdp axes ("data" [+ "pod"]): largest remaining divisible dim.
+  - tensor axis: preferred per-leaf dimension by param name (attention
+    heads, FFN hidden, vocab), falling back to the largest divisible dim;
+  - fsdp axes: largest remaining divisible dim.
 Every rule checks divisibility, so the same code shards whisper-base
 (d=512, 8 heads) and llama3-405b (d=16384, 128 heads) on a 16-wide tensor
 axis without per-arch tables.
+
+Axis names are resolved FROM THE MESH (``default_axes``), not hardcoded:
+the legacy production/dryrun meshes name the tensor axis "model" and fsdp
+("pod", "data"); the engine's group mesh (``launch.mesh.make_group_mesh``)
+names its model-parallel axis "mp" and keeps "group"/"data" replicated for
+params. The same rule code serves both.
+
+For the engine's mp-sharded parameter/optimizer storage,
+``engine_param_specs`` adds two idioms on top of the name table (both
+after redco's deployer utilities — SNIPPETS.md 1-2):
+
+  - explicit ``(regex-path-window, PartitionSpec)`` rules, first match
+    wins (``set_partitions``);
+  - auto-derivation for leaves no rule or table entry matches
+    (``get_sharding_rules``): the trailing-most body dim divisible by the
+    mp axis size, 1-D leaves replicated.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+import re
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -40,6 +56,24 @@ def _axis_size(mesh: Mesh, axes) -> int:
     return int(np.prod([mesh.shape[a] for a in axes]))
 
 
+def default_axes(mesh: Mesh) -> Tuple[Optional[str], Tuple[str, ...]]:
+    """(tensor_axis, fsdp_axes) resolved from the mesh's axis names.
+
+    The tensor (model-parallel) axis is "model" when present (legacy
+    production/dryrun meshes), else "mp" (the engine's group mesh), else
+    None (pure data parallelism). FSDP axes are whichever of ("pod",
+    "data") the mesh carries. A mesh's "group" axis is never used by
+    param rules — the grouped update requires params replicated across
+    groups."""
+    if "model" in mesh.shape:
+        tensor = "model"
+    elif "mp" in mesh.shape:
+        tensor = "mp"
+    else:
+        tensor = None
+    return tensor, tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
 def _leaf_name(path) -> str:
     for entry in reversed(path):
         key = getattr(entry, "key", None)
@@ -49,12 +83,13 @@ def _leaf_name(path) -> str:
 
 
 def param_spec(path, shape: Tuple[int, ...], mesh: Mesh, *,
-               tensor_axis: str = "model",
+               tensor_axis: Optional[str] = "model",
                fsdp_axes: Tuple[str, ...] = ("data",),
                num_stack_dims: int = 0,
                decode_kv_hd: bool = False) -> P:
     """Spec for one param leaf. ``num_stack_dims`` marks leading lax.scan
-    stacking dims (layers / super-blocks) that must stay unsharded."""
+    stacking dims (layers / super-blocks) that must stay unsharded.
+    ``tensor_axis=None`` disables tensor sharding (fsdp only)."""
     name = _leaf_name(path)
     ndim = len(shape)
     assign: Dict[int, object] = {}
@@ -88,11 +123,12 @@ def param_spec(path, shape: Tuple[int, ...], mesh: Mesh, *,
         prefs.append(ndim - 1)
     if not strict:
         prefs += sorted(body, key=lambda d: -shape[d])
-    for d in prefs:
-        if d in body and shape[d] % tsize == 0 and shape[d] >= tsize:
-            tdim = d
-            break
-    if tdim is not None and tsize > 1:
+    if tsize > 1:
+        for d in prefs:
+            if d in body and shape[d] % tsize == 0 and shape[d] >= tsize:
+                tdim = d
+                break
+    if tdim is not None:
         assign[tdim] = tensor_axis
 
     # Embedding / unembedding: vocab on tensor axis ONLY. FSDP on d_model
@@ -124,12 +160,16 @@ def _stack_dims(path, cfg) -> int:
 
 
 def params_shardings(params_shapes, cfg, mesh: Mesh, *,
-                     tensor_axis: str = "model",
+                     tensor_axis: Optional[str] = None,
                      fsdp_axes: Optional[Tuple[str, ...]] = None,
                      decode_kv_hd: bool = False):
-    """NamedShardings for a params (or momentum) pytree of ShapeDtypeStructs."""
+    """NamedShardings for a params (or momentum) pytree of
+    ShapeDtypeStructs. Axis names default to ``default_axes(mesh)``."""
+    mesh_tensor, mesh_fsdp = default_axes(mesh)
+    if tensor_axis is None:
+        tensor_axis = mesh_tensor
     if fsdp_axes is None:
-        fsdp_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+        fsdp_axes = mesh_fsdp
 
     def one(path, leaf):
         spec = param_spec(path, leaf.shape, mesh, tensor_axis=tensor_axis,
@@ -141,16 +181,111 @@ def params_shardings(params_shapes, cfg, mesh: Mesh, *,
     return jax.tree_util.tree_map_with_path(one, params_shapes)
 
 
+# ---------------------------------------------------------------------------
+# Engine param/optimizer-state specs (mp axis only)
+# ---------------------------------------------------------------------------
+
+def _path_keys(path) -> Tuple[str, ...]:
+    """Tree path -> string keys (dict keys and sequence indices alike),
+    the match target of explicit rules."""
+    return tuple(str(getattr(e, "key", getattr(e, "idx", e))) for e in path)
+
+
+def _match_rule(patterns: Sequence[str], keys: Sequence[str]) -> bool:
+    """True if ``patterns`` (regexes, full-match each) match any
+    contiguous window of ``keys`` — redco/t5x ``set_partitions``."""
+    pats = tuple(re.compile(p + r"$") for p in patterns)
+    for i in range(len(keys) - len(pats) + 1):
+        window = keys[i:i + len(pats)]
+        if all(p.match(k) for p, k in zip(pats, window)):
+            return True
+    return False
+
+
+def auto_spec(shape: Tuple[int, ...], size: int, *,
+              axis: str, num_stack_dims: int = 0) -> P:
+    """Auto-derived spec for a leaf no rule or table entry matches (redco
+    ``get_sharding_rules``): shard the trailing-most body dim divisible by
+    ``size``; 1-D bodies (and leaves with no divisible dim) replicate."""
+    ndim = len(shape)
+    body = list(range(num_stack_dims, ndim))
+    if size <= 1 or len(body) <= 1:
+        return P(*[None] * ndim)
+    for d in reversed(body):
+        if shape[d] % size == 0 and shape[d] >= size:
+            return P(*[axis if i == d else None for i in range(ndim)])
+    return P(*[None] * ndim)
+
+
+def engine_param_specs(params, mesh: Mesh, *, rules=None, mp_axis=None,
+                       cfg=None):
+    """PartitionSpec tree for the engine's model-parallel param/optimizer
+    storage. Only the mesh's model-parallel axis is ever used — "group"
+    and "data" stay replicated because the grouped update must run
+    identically on every worker of every group.
+
+    Per leaf, first match wins:
+      1. an explicit ``(path-regex-window, PartitionSpec)`` entry from
+         ``rules`` (the redco ``set_partitions`` idiom);
+      2. the ``TENSOR_PREF`` name table via ``param_spec`` (attention /
+         FFN / vocab preferences, strictness rules included);
+      3. ``auto_spec`` derivation (the redco ``get_sharding_rules``
+         idiom) for everything else.
+
+    ``params`` may hold arrays or ShapeDtypeStructs. Every emitted spec
+    divides its leaf shape (``param_spec``/``auto_spec`` check
+    divisibility; explicit rules are validated here)."""
+    if mp_axis is None:
+        mp_axis = default_axes(mesh)[0]
+    size = int(mesh.shape[mp_axis]) if mp_axis is not None else 1
+    rules = tuple(rules or ())
+
+    def one(path, leaf):
+        shape = tuple(leaf.shape)
+        if size > 1:
+            keys = _path_keys(path)
+            for patterns, spec in rules:
+                if _match_rule(patterns, keys):
+                    spec = P(*spec) if not isinstance(spec, P) else spec
+                    for d, ax in enumerate(spec):
+                        if ax is None:
+                            continue
+                        s = _axis_size(mesh, ax)
+                        if d >= len(shape) or shape[d] % s:
+                            raise ValueError(
+                                f"rule {patterns} gives spec {spec} which "
+                                f"does not divide leaf {keys} of shape "
+                                f"{shape}")
+                    return spec
+        nsd = _stack_dims(path, cfg)
+        if _leaf_name(path) in TENSOR_PREF:
+            return param_spec(path, shape, mesh, tensor_axis=mp_axis,
+                              fsdp_axes=(), num_stack_dims=nsd)
+        return auto_spec(shape, size, axis=mp_axis, num_stack_dims=nsd)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def spec_mp_dim(spec: P, axis: str) -> Optional[int]:
+    """Dim index ``axis`` shards in ``spec`` (None when replicated)."""
+    for d, ax in enumerate(spec):
+        if ax == axis or (isinstance(ax, tuple) and axis in ax):
+            return d
+    return None
+
+
 def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.shape)
 
 
-def batch_shardings(batch_shapes, mesh: Mesh, *, tensor_axis: str = "model",
-                    batch_dim: int = 0):
+def batch_shardings(batch_shapes, mesh: Mesh, *,
+                    tensor_axis: Optional[str] = None, batch_dim: int = 0):
     """Inputs: the batch dim (0, or 1 under grad-accum microbatching) over
     (pod, data) when divisible; the trailing embedding dim of float
     modality-stub inputs over tensor when divisible. Never shard the token
     sequence dim."""
+    if tensor_axis is None:
+        tensor_axis = default_axes(mesh)[0]
     baxes = batch_axes(mesh)
     bsize = _axis_size(mesh, baxes)
     tsize = _axis_size(mesh, tensor_axis)
@@ -177,10 +312,12 @@ _CACHE_SEQ_NAMES = {"k", "v", "ck", "cv"}
 
 
 def cache_shardings(cache_shapes, cfg, mesh: Mesh, *, batch: int,
-                    tensor_axis: str = "model"):
+                    tensor_axis: Optional[str] = None):
     """Decode-cache pytree: batch dim over data axes; for attention k/v the
     ring/window dim over tensor when divisible; for SSM state the head dim
     over tensor."""
+    if tensor_axis is None:
+        tensor_axis = default_axes(mesh)[0]
     baxes = batch_axes(mesh)
     bsize = _axis_size(mesh, baxes)
     tsize = _axis_size(mesh, tensor_axis)
@@ -241,8 +378,10 @@ _ACT_CTX = contextvars.ContextVar("repro_act_sharding", default=None)
 @contextlib.contextmanager
 def activation_sharding(mesh: Mesh, batch_axes_=None, *,
                         seq_parallel_attention: bool = False,
-                        tensor_axis: str = "model",
+                        tensor_axis: Optional[str] = None,
                         weight_stationary: bool = False):
+    if tensor_axis is None:
+        tensor_axis = default_axes(mesh)[0]
     axes = batch_axes_ if batch_axes_ is not None else batch_axes(mesh)
     token = _ACT_CTX.set((mesh, axes, seq_parallel_attention, tensor_axis,
                           weight_stationary))
@@ -294,7 +433,7 @@ def constrain_kv_seq(x, seq_dim: int = 1, batch_dim: int = 0):
     ctx = _ACT_CTX.get()
     if ctx is None or not hasattr(x, "ndim"):
         return x
-    mesh, axes, _, taxis = ctx
+    mesh, axes, taxis = ctx[0], ctx[1], ctx[3]
     tsize = _axis_size(mesh, taxis)
     if tsize <= 1 or x.ndim <= seq_dim or x.shape[seq_dim] % tsize:
         return x

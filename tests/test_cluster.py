@@ -186,6 +186,81 @@ def test_planner_picks_async_when_fc_saturates():
     assert plan.t_iteration < t_sync
 
 
+def test_mp_collective_and_feasibility_terms():
+    """Unit pins for the new HE terms: all-gather bytes over the slowest
+    link, and the state_bytes/mp <= mem_bytes feasibility rule."""
+    devs = [cluster.DeviceSpec("d", "gpu", peak_flops=1e12, mem_bw=1e11,
+                               net_bw=1e9, mem_bytes=4e9)]
+    assert cluster.mp_collective_time(devs, 1e9, 1) == 0.0
+    assert cluster.mp_collective_time(devs, 1e9, 2) == pytest.approx(0.5)
+    assert cluster.mp_collective_time(devs, 1e9, 4) == pytest.approx(0.75)
+    big = cluster.WorkloadCost(flops_per_example=1.0, bytes_per_example=1.0,
+                               grad_bytes=1.0, state_bytes=6e9)
+    assert not cluster.mp_feasible(devs, big, 1)
+    assert cluster.mp_feasible(devs, big, 2)
+    assert cluster.mp_feasible(devs, None, 1)      # no cost: unconstrained
+    assert cluster.mp_feasible(devs, COST, 1)      # state_bytes=0: same
+
+
+def test_plan_for_g_is_mp1_point():
+    devs = cluster.parse_cluster_spec(MIXED)
+    a = cluster.plan_for_g(devs, 2, global_batch=64, t_fc=0.002, cost=COST)
+    b = cluster.plan_for_g_mp(devs, 2, 1, global_batch=64, t_fc=0.002,
+                              cost=COST)
+    assert (a.g, a.mp) == (2, 1) == (b.g, b.mp)
+    assert a.group_times == b.group_times
+    assert a.time_score == b.time_score
+
+
+def test_planner_mp_search_is_memory_driven():
+    """The 2-D (g, mp) search: a model whose resident state exceeds one
+    device's memory makes every mp=1 point infeasible — the planner
+    returns the smallest mp that fits (replication costs throughput, so
+    more mp than memory demands never wins). A model that fits keeps
+    mp=1."""
+    devs = cluster.parse_cluster_spec("8xgpu-g2.2xlarge")   # 4 GB/device
+    big = cluster.WorkloadCost(flops_per_example=2e9, bytes_per_example=2e8,
+                               grad_bytes=4e6, state_bytes=6e9)
+    with pytest.raises(ValueError, match="infeasible"):
+        cluster.plan_for_g_mp(devs, 1, 1, global_batch=64, t_fc=0.002,
+                              cost=big)
+    plan = cluster.best_allocation(devs, global_batch=64, t_fc=0.002,
+                                   cost=big, mp_candidates=(1, 2, 4))
+    assert plan.mp == 2
+    assert "mp=2" in plan.describe()
+    small = cluster.best_allocation(devs, global_batch=64, t_fc=0.002,
+                                    cost=COST, mp_candidates=(1, 2, 4))
+    assert small.mp == 1
+    # nothing fits: the search re-raises instead of returning a bad plan
+    hopeless = dataclasses.replace(big, state_bytes=1e12)
+    with pytest.raises(ValueError, match="no feasible"):
+        cluster.best_allocation(devs, global_batch=64, t_fc=0.002,
+                                cost=hopeless, mp_candidates=(1, 2, 4))
+
+
+def test_algorithm1_mp_plan_passthrough():
+    """A (g, mp) plan flows through Algorithm 1: mp is validated against
+    the device budget, carried on the result, and never re-searched."""
+    devs = cluster.parse_cluster_spec("8xgpu-g2.2xlarge")
+    big = cluster.WorkloadCost(flops_per_example=2e9, bytes_per_example=2e8,
+                               grad_bytes=4e6, state_bytes=6e9)
+    plan = cluster.best_allocation(devs, global_batch=64, t_fc=0.002,
+                                   cost=big, mp_candidates=(1, 2, 4))
+
+    def runner(state, *, g, mu, eta, steps, probe):
+        losses = np.linspace(1.0, 0.1 - 0.05 * mu, steps)
+        return state, losses
+
+    res = algorithm1(runner, None, n_devices=8, epochs=1, epoch_steps=10,
+                     probe_steps=5, plan=plan)
+    assert res.mp == plan.mp == 2
+    assert res.g == plan.g
+    bad = dataclasses.replace(plan, g=8)         # 8 * mp 2 = 16 > 8 devices
+    with pytest.raises(ValueError, match="infeasible"):
+        algorithm1(runner, None, n_devices=8, epochs=1, epoch_steps=10,
+                   probe_steps=5, plan=bad)
+
+
 def test_algorithm1_accepts_planner_plan():
     """Initial g comes from the plan (not smallest_saturating_g / N)."""
     devs = cluster.parse_cluster_spec(MIXED)

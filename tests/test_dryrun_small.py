@@ -81,3 +81,56 @@ def test_small_mesh_dryrun(arch):
     results = json.loads(line[0][len("RESULT:"):])
     for shape, status in results.items():
         assert status in ("ok", "skipped"), (shape, status)
+
+
+PLAN_TO_DRYRUN_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, "src")
+import json
+import numpy as np
+from repro import cluster
+from repro.core.auto_optimizer import algorithm1
+
+# a 405B-class state does not fit one 4 GB device: the 2-D search must
+# return mp > 1
+devs = cluster.parse_cluster_spec("8xgpu-g2.2xlarge")
+cost = cluster.WorkloadCost(flops_per_example=2e9, bytes_per_example=2e8,
+                            grad_bytes=4e6, state_bytes=6e9)
+plan = cluster.best_allocation(devs, global_batch=64, t_fc=0.002, cost=cost,
+                               g_candidates=(1, 2), mp_candidates=(1, 2))
+
+def runner(state, *, g, mu, eta, steps, probe):
+    return state, np.linspace(1.0, 0.1 - 0.05 * mu, steps)
+
+res = algorithm1(runner, None, n_devices=8, epochs=1, epoch_steps=10,
+                 probe_steps=5, plan=plan)
+assert res.mp == plan.mp and res.g == plan.g, (res.g, res.mp)
+
+# ... and the dryrun host-smoke lane accepts the planned (g, mp) mesh for
+# a 405B-class config: 8 host devices split as (g, data, mp)
+from repro.launch.dryrun import host_smoke_one
+data = 8 // (res.g * res.mp)
+out = host_smoke_one("llama3-405b", groups=res.g, data=data, mp=res.mp,
+                     verbose=False)
+print("RESULT:" + json.dumps({
+    "g": res.g, "mp": res.mp, "status": out["status"],
+    "mp_leaves": out["mp_sharded_param_leaves"]}))
+"""
+
+
+def test_algorithm1_plan_accepted_by_dryrun():
+    """ISSUE acceptance: algorithm1 returns a (g, mp) plan and the dryrun
+    host-smoke lane lowers+compiles a 405B-class config through the
+    planned ("group","data","mp") mesh."""
+    proc = subprocess.run([sys.executable, "-c", PLAN_TO_DRYRUN_SCRIPT],
+                          capture_output=True, text=True, timeout=420,
+                          cwd="/root/repo")
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT:")]
+    assert line, proc.stdout
+    res = json.loads(line[0][len("RESULT:"):])
+    assert res["status"] == "ok", res
+    assert res["mp"] == 2, res
+    assert res["mp_leaves"] > 0, res

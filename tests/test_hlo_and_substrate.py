@@ -81,6 +81,80 @@ def test_checkpoint_shape_mismatch(tmp_path):
         CK.restore(tmp_path / "ckpt_0000002", {"a": jnp.ones((3,))})
 
 
+@pytest.mark.skipif(jax.device_count() < 8,
+                    reason="needs 8 host devices (tests/conftest.py)")
+def test_checkpoint_restores_through_target_sharding(tmp_path):
+    """Save -> restore under a live ("group","data","mp") mesh: each
+    restored leaf lands in the TARGET leaf's sharding (device_put through
+    leaf.sharding), not replicated on the default device — resuming an
+    mp-sharded Engine run must place shards back on their devices."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.launch.mesh import make_group_mesh
+
+    mesh = make_group_mesh(1, 2, 2)
+    sh = NamedSharding(mesh, P(None, "mp"))
+    w = jax.device_put(jnp.arange(32.0).reshape(4, 8), sh)
+    m = jax.device_put(jnp.zeros((4, 8)), sh)
+    CK.save(tmp_path / "ckpt_0000003", {"w": w, "m": m}, step=3)
+    restored, step = CK.restore(tmp_path / "ckpt_0000003",
+                                {"w": w, "m": m})
+    assert step == 3
+    r = restored["w"]
+    assert r.sharding.is_equivalent_to(sh, r.ndim)
+    # genuinely distributed: one (4, 4) mp-shard per device, not a
+    # single default-device copy
+    assert len(r.addressable_shards) == mesh.devices.size
+    assert all(s.data.shape == (4, 4) for s in r.addressable_shards)
+    np.testing.assert_array_equal(np.asarray(r), np.asarray(w))
+    np.testing.assert_array_equal(np.asarray(restored["m"]), np.asarray(m))
+
+
+def test_checkpoint_dtype_mismatch_requires_allow_cast(tmp_path):
+    """Dtype drift between the saved and resuming run raises; an explicit
+    allow_cast=True casts to the target dtype."""
+    CK.save(tmp_path / "ckpt_0000004", {"a": jnp.ones((2,), jnp.float32)},
+            step=1)
+    with pytest.raises(ValueError, match="dtype mismatch"):
+        CK.restore(tmp_path / "ckpt_0000004",
+                   {"a": jnp.ones((2,), jnp.bfloat16)})
+    restored, _ = CK.restore(tmp_path / "ckpt_0000004",
+                             {"a": jnp.ones((2,), jnp.bfloat16)},
+                             allow_cast=True)
+    assert restored["a"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(restored["a"], np.float32),
+                                  np.ones((2,), np.float32))
+
+
+def test_checkpoint_slash_keys_do_not_alias(tmp_path):
+    """A dict key containing "/" must not alias a nested path: {"a/b"}
+    and {"a": {"b"}} flatten to distinct escaped names and round-trip
+    with their own values (pre-fix, np.savez silently kept one)."""
+    tree = {"a/b": jnp.arange(2.0), "a": {"b": jnp.arange(3.0)}}
+    CK.save(tmp_path / "ckpt_0000005", tree, step=5)
+    restored, _ = CK.restore(tmp_path / "ckpt_0000005", tree)
+    np.testing.assert_array_equal(np.asarray(restored["a/b"]),
+                                  np.arange(2.0, dtype=np.float32))
+    np.testing.assert_array_equal(np.asarray(restored["a"]["b"]),
+                                  np.arange(3.0, dtype=np.float32))
+
+
+def test_checkpoint_name_collision_raises(tmp_path):
+    """save refuses trees whose distinct leaves flatten to the same name
+    (a malformed custom node) instead of letting np.savez keep the last
+    write."""
+    class Dup:
+        def __init__(self, a, b):
+            self.a, self.b = a, b
+
+    jax.tree_util.register_pytree_with_keys(
+        Dup, lambda d: ((("x", d.a), ("x", d.b)), None),
+        lambda aux, kids: Dup(*kids))
+    with pytest.raises(ValueError, match="collision"):
+        CK.save(tmp_path / "ckpt_0000006",
+                Dup(jnp.ones((2,)), jnp.zeros((2,))), step=1)
+
+
 # ---------------------------------------------------------------------------
 # data pipeline
 # ---------------------------------------------------------------------------

@@ -1,0 +1,220 @@
+"""Property tests for sharding/rules.py — the engine's mp param-spec
+derivation (the mp-axis PR's rules contract).
+
+Invariants pinned here:
+  * every spec emitted by engine_param_specs / param_spec / auto_spec
+    divides its leaf shape (no invalid sharding ever escapes the rules);
+  * leading lax.scan stacking dims are never sharded;
+  * engine specs only ever use the mp axis — "group"/"data" stay
+    replicated for params (the grouped update runs identically on every
+    worker of every group);
+  * the TENSOR_PREF fallback never silently replicates a shardable
+    matmul weight;
+  * explicit (path-regex, PartitionSpec) rules win over the table, and a
+    non-dividing explicit rule raises instead of emitting a bad spec;
+  * default_axes resolves tensor/fsdp names from every mesh flavor
+    (legacy "model" naming, engine "mp" naming, pure-data meshes).
+
+Rule derivation touches no devices (specs are pure functions of shapes
+and mesh axis sizes), so most tests drive a lightweight mesh stand-in —
+only the real-mesh resolution test needs the forced 8-device pool.
+"""
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding.rules import (TENSOR_PREF, _match_rule, auto_spec,
+                                  default_axes, engine_param_specs,
+                                  spec_mp_dim)
+
+needs8 = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs 8 host devices (tests/conftest.py forces them in tier-1)")
+
+
+def _mesh(**axes):
+    """Shape-only mesh stand-in: rule derivation reads mesh.shape only."""
+    return types.SimpleNamespace(shape=dict(axes))
+
+
+MESH_MP2 = _mesh(group=2, data=2, mp=2)
+MESH_MP4 = _mesh(group=1, data=2, mp=4)
+
+
+def _sds(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def _axes_used(spec):
+    return {a for e in tuple(spec)
+            for a in (e if isinstance(e, tuple) else (e,)) if a is not None}
+
+
+def _spec_divides(spec, shape, mesh):
+    for d, ax in enumerate(tuple(spec)):
+        if ax is None:
+            continue
+        size = int(np.prod([mesh.shape[a] for a in
+                            (ax if isinstance(ax, tuple) else (ax,))]))
+        if d >= len(shape) or shape[d] % size:
+            return False
+    return True
+
+
+def _check_leaf_spec(name, shape, spec, mesh, stacked=0):
+    assert len(tuple(spec)) == len(shape), (name, shape, spec)
+    assert _spec_divides(spec, shape, mesh), (name, shape, spec)
+    assert _axes_used(spec) <= {"mp"}, (name, shape, spec)
+    for d in range(stacked):
+        assert tuple(spec)[d] is None, (name, shape, spec)
+
+
+def test_engine_specs_always_divide_and_use_only_mp():
+    """Exhaustive sweep: every TENSOR_PREF name plus unknown names, over
+    pseudo-random shapes/ndims and mp in {2, 4} — emitted specs always
+    divide, never touch group/data, never shard a scan-stack dim."""
+    rng = np.random.default_rng(0)
+    names = list(TENSOR_PREF) + ["mystery", "alpha", "h0", "scale"]
+    dims = [1, 2, 3, 4, 5, 6, 8, 12, 16, 32, 48]
+    for mesh in (MESH_MP2, MESH_MP4):
+        for trial in range(200):
+            name = names[int(rng.integers(len(names)))]
+            ndim = int(rng.integers(1, 5))
+            shape = tuple(int(rng.choice(dims)) for _ in range(ndim))
+            specs = engine_param_specs({name: _sds(shape)}, mesh)
+            _check_leaf_spec(name, shape, specs[name], mesh)
+
+
+def test_engine_specs_never_shard_scan_stack_dims():
+    """Params under a "blocks" path carry a leading lax.scan stacking dim
+    that must stay unsharded whatever the name table says."""
+    mesh = MESH_MP2
+    params = {"blocks": {"w_up": _sds((4, 64, 256)),
+                         "wq": _sds((4, 64, 64)),
+                         "mystery": _sds((4, 32, 48))}}
+    specs = engine_param_specs(params, mesh)
+    for name, leaf in params["blocks"].items():
+        spec = specs["blocks"][name]
+        _check_leaf_spec(name, leaf.shape, spec, mesh, stacked=1)
+        assert spec_mp_dim(spec, "mp") not in (None, 0), (name, spec)
+
+
+def test_tensor_pref_fallback_never_replicates_shardable_weight():
+    """A >=2-D matmul weight whose every dim divides the mp axis must come
+    out sharded — silent replication of shardable weights is the memory
+    regression the big configs died on."""
+    mesh = MESH_MP2
+    names = ["wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down", "tok",
+             "unembed", "router", "in_proj", "out_proj", "w_rec_in",
+             "mystery_weight"]
+    for name in names:
+        specs = engine_param_specs({name: _sds((48, 64))}, mesh)
+        spec = specs[name]
+        _check_leaf_spec(name, (48, 64), spec, mesh)
+        assert spec_mp_dim(spec, "mp") is not None, (name, spec)
+    # 1-D leaves (norm scales, biases) are NOT matmul weights: replicated
+    specs = engine_param_specs({"scale": _sds((64,))}, mesh)
+    assert spec_mp_dim(specs["scale"], "mp") is None
+
+
+def test_explicit_rules_win_and_validate_divisibility():
+    mesh = MESH_MP2
+    # the table would shard wq on dim 1; an explicit rule forces dim 0
+    rules = (((r"enc", r"wq"), P("mp", None)),)
+    specs = engine_param_specs({"enc": {"wq": _sds((8, 6))}}, mesh,
+                               rules=rules)
+    assert tuple(specs["enc"]["wq"]) == ("mp", None)
+    # first match wins over later rules and over the table
+    rules2 = (((r"wq",), P()), ((r"w.",), P("mp", None)))
+    specs2 = engine_param_specs({"wq": _sds((8, 6))}, mesh, rules=rules2)
+    assert tuple(specs2["wq"]) == ()
+    # a rule that does not divide the leaf raises instead of emitting
+    bad = (((r"wq",), P(None, "mp")),)
+    with pytest.raises(ValueError, match="does not divide"):
+        engine_param_specs({"wq": _sds((8, 5))}, mesh, rules=bad)
+
+
+def test_match_rule_contiguous_windows_full_match():
+    assert _match_rule((r"blocks", r"w\d"), ("m", "blocks", "w1"))
+    assert not _match_rule((r"blocks", r"w1"), ("blocks", "x", "w1"))
+    assert _match_rule((r"w1",), ("a", "b", "w1"))
+    assert not _match_rule((r"w",), ("w1",))        # full match, not prefix
+    assert not _match_rule((r"a", r"b"), ("b",))    # window longer than keys
+
+
+def test_auto_spec_trailing_most_divisible():
+    assert tuple(auto_spec((8,), 2, axis="mp")) == (None,)
+    assert tuple(auto_spec((6, 8), 2, axis="mp")) == (None, "mp")
+    assert tuple(auto_spec((6, 7), 2, axis="mp")) == ("mp", None)
+    assert tuple(auto_spec((5, 7), 2, axis="mp")) == (None, None)
+    assert tuple(auto_spec((4, 6, 8), 2, axis="mp",
+                           num_stack_dims=1)) == (None, None, "mp")
+    # stacked leaf with a 1-D body replicates
+    assert tuple(auto_spec((4, 8), 2, axis="mp",
+                           num_stack_dims=1)) == (None, None)
+    assert tuple(auto_spec((6, 8), 1, axis="mp")) == (None, None)
+
+
+def test_spec_mp_dim():
+    assert spec_mp_dim(P(None, "mp"), "mp") == 1
+    assert spec_mp_dim(P(("data", "mp"), None), "mp") == 0
+    assert spec_mp_dim(P("data", None), "mp") is None
+    assert spec_mp_dim(P(), "mp") is None
+
+
+def test_default_axes_all_mesh_flavors():
+    assert default_axes(_mesh(data=16, model=16)) == ("model", ("data",))
+    assert default_axes(_mesh(pod=2, data=16, model=16)) == \
+        ("model", ("pod", "data"))
+    assert default_axes(_mesh(group=2, data=2, mp=2)) == ("mp", ("data",))
+    assert default_axes(_mesh(group=2, data=4)) == (None, ("data",))
+
+
+@needs8
+def test_default_axes_on_real_meshes():
+    """The real mesh constructors resolve to the same axis roles the
+    stand-ins pin above (engine group mesh, host-smoke mesh, legacy test
+    mesh)."""
+    from repro.launch.mesh import (make_group_mesh, make_host_smoke_mesh,
+                                   make_test_mesh)
+    assert default_axes(make_group_mesh(2, 2, 2)) == ("mp", ("data",))
+    assert default_axes(make_host_smoke_mesh(data=4, mp=2)) == \
+        ("mp", ("data",))
+    assert default_axes(make_test_mesh(2, 2)) == ("model", ("data",))
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # property tests report as skipped; rest run
+    st = None
+
+if st is None:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_engine_specs_divide_property():
+        pass
+else:
+    _NAMES = list(TENSOR_PREF) + ["mystery", "alpha", "h0"]
+
+    @given(st.sampled_from(_NAMES),
+           st.lists(st.sampled_from([1, 2, 3, 4, 5, 6, 8, 12, 16, 32, 48]),
+                    min_size=1, max_size=4),
+           st.sampled_from([1, 2, 4]),
+           st.booleans())
+    @settings(max_examples=150, deadline=None)
+    def test_engine_specs_divide_property(name, shape, mp, stacked):
+        """Hypothesis sweep of the same invariants: specs divide, only the
+        mp axis appears, stack dims stay unsharded, mp=1 replicates."""
+        mesh = _mesh(group=2, data=2, mp=mp)
+        shape = tuple(([4] if stacked else []) + shape)
+        tree = ({"blocks": {name: _sds(shape)}} if stacked
+                else {name: _sds(shape)})
+        specs = engine_param_specs(tree, mesh)
+        spec = specs["blocks"][name] if stacked else specs[name]
+        _check_leaf_spec(name, shape, spec, mesh,
+                         stacked=1 if stacked else 0)
+        if mp == 1:
+            assert _axes_used(spec) == set()
