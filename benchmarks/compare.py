@@ -26,6 +26,13 @@ that median. Blind spot (documented, accepted): a uniform slowdown of
 every metric reads as "slower machine" — the gate catches *relative*
 regressions, which is what a code change produces.
 
+Floor gates: any ``{"value": v, "floor": f}`` dict in a bench JSON is a
+quality metric gated as ``v >= f`` against the floor embedded in the
+*fresh* emission (the floor travels with the code, so raising it is an
+explicit change, never a baseline drift). Used by BENCH_serving.json's
+continuous-vs-static goodput ratio. Floor metrics present in the
+baseline but absent from fresh fail, like vanished timing metrics.
+
 Environment guard: every BENCH emitter stamps ``run_metadata()`` under
 ``"env"`` (``repro.obs.meta``). Under ``--normalize`` the gate REFUSES
 to compare files whose strict env keys (jax version, backend, device
@@ -51,9 +58,13 @@ from repro.obs.meta import env_mismatches  # noqa: E402
 #: keys that identify a row inside a list (checked in order); values must
 #: be scalars. "bench"/"device_count" identify top-level sections.
 ID_KEYS = ("bench", "device_count", "g", "mp", "arch", "impl", "batch",
-           "bucket_bytes", "buckets", "mode", "name", "variant")
+           "bucket_bytes", "buckets", "mode", "name", "variant",
+           "rate", "slo_ms", "slots", "page")
 
 STATS_KEYS = {"min_us", "median_us", "iqr_us"}
+#: a dict carrying both keys is a floor-gated quality metric: the fresh
+#: emission must satisfy value >= floor (e.g. the serving goodput ratio).
+FLOOR_KEYS = {"value", "floor"}
 
 
 def _ident(d: dict) -> str:
@@ -62,33 +73,62 @@ def _ident(d: dict) -> str:
     return ",".join(parts)
 
 
-def extract_metrics(node, prefix: str = "") -> dict:
-    """{metric_name: stats_row} for every TimeStats row in the document."""
+def _extract(node, match, prefix: str = "") -> dict:
+    """{metric_name: row} for every dict in the document satisfying
+    ``match`` (a set of keys the row must carry)."""
     out = {}
     if isinstance(node, dict):
-        if STATS_KEYS <= set(node):
+        if match <= set(node):
             out[prefix or "root"] = node
             return out
         ident = _ident(node)
         base = f"{prefix}[{ident}]" if ident else prefix
         for key, val in node.items():
             if isinstance(val, (dict, list)):
-                out.update(extract_metrics(
-                    val, f"{base}.{key}" if base else key))
+                out.update(_extract(
+                    val, match, f"{base}.{key}" if base else key))
     elif isinstance(node, list):
         for i, val in enumerate(node):
             if isinstance(val, dict):
                 # identified rows name themselves (dict branch); only
                 # anonymous rows fall back to their (unstable) position
                 tag = "" if _ident(val) else f"[{i}]"
-                out.update(extract_metrics(val, f"{prefix}{tag}"))
+                out.update(_extract(val, match, f"{prefix}{tag}"))
             elif isinstance(val, list):
-                out.update(extract_metrics(val, f"{prefix}[{i}]"))
+                out.update(_extract(val, match, f"{prefix}[{i}]"))
     return out
+
+
+def extract_metrics(node, prefix: str = "") -> dict:
+    """{metric_name: stats_row} for every TimeStats row in the document."""
+    return _extract(node, STATS_KEYS, prefix)
+
+
+def extract_floors(node, prefix: str = "") -> dict:
+    """{metric_name: floor_row} for every ``{"value", "floor"}`` quality
+    gate in the document."""
+    return _extract(node, FLOOR_KEYS, prefix)
 
 
 def load_bench(path: Path) -> dict:
     return extract_metrics(json.loads(path.read_text()))
+
+
+def check_floors(base: dict, fresh: dict) -> dict:
+    """Gate every floor metric in the fresh emission against its own
+    embedded floor (the floor travels with the emission, so raising it is
+    an explicit code change). Baseline floor metrics absent from fresh
+    are failures — gate coverage must not silently shrink."""
+    rows, failures = [], 0
+    for m in sorted(fresh):
+        value, floor = fresh[m]["value"], fresh[m]["floor"]
+        ok = value >= floor
+        failures += 0 if ok else 1
+        rows.append({"metric": m, "value": value, "floor": floor,
+                     "base_value": base[m]["value"] if m in base else None,
+                     "status": "ok" if ok else "below-floor"})
+    return {"rows": rows, "failures": failures,
+            "missing": sorted(set(base) - set(fresh))}
 
 
 def compare_metrics(base: dict, fresh: dict, *, tol: float = 0.15,
@@ -163,6 +203,16 @@ def markdown_table(name: str, report: dict, *, show_ok: bool = True) -> str:
                      f"{r['fresh_min_us']:.1f} | {delta} | {mark} |")
     for m in report["missing"]:
         lines.append(f"| `{m}` | — | — | — | **MISSING** |")
+    floors = report.get("floors")
+    if floors and (floors["rows"] or floors["missing"]):
+        lines += ["", "| quality gate | floor | value | status |",
+                  "|---|---:|---:|---|"]
+        for r in floors["rows"]:
+            mark = "ok" if r["status"] == "ok" else "**BELOW FLOOR**"
+            lines.append(f"| `{r['metric']}` | {r['floor']:.2f} | "
+                         f"{r['value']:.2f} | {mark} |")
+        for m in floors["missing"]:
+            lines.append(f"| `{m}` | — | — | **MISSING** |")
     lines.append("")
     return "\n".join(lines)
 
@@ -206,11 +256,17 @@ def compare_dirs(base_dir: Path, fresh_dir: Path, *, tol: float,
                     + "\n(re-baseline, or pass --allow-env-mismatch to "
                       "override)\n")
                 continue
-        rep = compare_metrics(load_bench(f), load_bench(twin), tol=tol,
+        base_doc = json.loads(f.read_text())
+        twin_doc = json.loads(twin.read_text())
+        rep = compare_metrics(extract_metrics(base_doc),
+                              extract_metrics(twin_doc), tol=tol,
                               normalize=normalize)
+        rep["floors"] = check_floors(extract_floors(base_doc),
+                                     extract_floors(twin_doc))
         reports[f.name] = rep
         md.append(markdown_table(f.name, rep))
-        if rep["regressions"] or rep["missing"]:
+        if (rep["regressions"] or rep["missing"]
+                or rep["floors"]["failures"] or rep["floors"]["missing"]):
             ok = False
     return ok, reports, "\n".join(md)
 
@@ -254,13 +310,20 @@ def main(argv=None) -> int:
         with open(args.markdown, "a") as fh:
             fh.write(md + "\n")
     for name, rep in reports.items():
+        fl = rep.get("floors", {"failures": 0, "missing": [], "rows": []})
         if "error" in rep:
             print(f"FAIL {name}: {rep['error']}")
-        elif rep["regressions"] or rep["missing"]:
+        elif (rep["regressions"] or rep["missing"] or fl["failures"]
+                or fl["missing"]):
             print(f"FAIL {name}: {rep['regressions']} regression(s), "
-                  f"{len(rep['missing'])} missing metric(s)")
+                  f"{len(rep['missing'])} missing metric(s), "
+                  f"{fl['failures']} below-floor, "
+                  f"{len(fl['missing'])} missing floor gate(s)")
         else:
-            print(f"PASS {name}: {rep['shared']} metrics within tolerance")
+            extra = (f" + {len(fl['rows'])} floor gate(s)"
+                     if fl["rows"] else "")
+            print(f"PASS {name}: {rep['shared']} metrics within "
+                  f"tolerance{extra}")
     return 0 if ok else 1
 
 

@@ -1,8 +1,10 @@
 """Heterogeneous cluster subsystem (paper §V's third contribution).
 
 Black-box device profiles (``devices``), throughput-proportional group
-allocation (``allocator``), heterogeneous queue simulation (``sim``) and
-the time-to-convergence planner ``T(g, alloc) = HE x SE`` (``planner``).
+allocation (``allocator``), heterogeneous queue simulation (``sim``),
+the time-to-convergence planner ``T(g, alloc) = HE x SE`` (``planner``),
+and the serving-mode planner splitting devices into prefill vs decode
+pools against a latency SLO (``serving``).
 """
 from repro.cluster.allocator import Allocation, allocate, rebalance
 from repro.cluster.devices import (DeviceSpec, WorkloadCost, get_device,
@@ -13,6 +15,8 @@ from repro.cluster.planner import (Plan, best_allocation,
                                    hetero_time_per_iteration,
                                    mp_collective_time, mp_feasible,
                                    plan_for_g, plan_for_g_mp)
+from repro.cluster.serving import (ServingPlan, ServingSimResult,
+                                   plan_serving, simulate_serving, tok_rate)
 from repro.cluster.sim import simulate_hetero
 
 __all__ = [
@@ -22,5 +26,7 @@ __all__ = [
     "register_device", "spec_from_telemetry",
     "Plan", "best_allocation", "hetero_time_per_iteration",
     "mp_collective_time", "mp_feasible", "plan_for_g", "plan_for_g_mp",
+    "ServingPlan", "ServingSimResult", "plan_serving", "simulate_serving",
+    "tok_rate",
     "simulate_hetero",
 ]

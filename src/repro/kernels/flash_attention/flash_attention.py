@@ -5,6 +5,20 @@ sequential — running max / denominator / accumulator live in VMEM scratch
 across kv steps (the classic flash recurrence, TPU-style: blocks sized for
 VMEM, dots shaped for the 128x128 MXU).
 
+GQA runs without materializing repeated K/V: when ``kv_group > 1`` the
+query rows are laid out head-major (``b*H + h`` with ``h = kv_head *
+kv_group + g``) while K/V keep one row per kv head (``b*K + kv_head``),
+and the K/V BlockSpec *index maps* compute the kv row from the grid's
+batch*head index — the same block arithmetic, one ``kv_group``-th of the
+KV bytes streamed from HBM.
+
+``q_offsets`` gives every batch*head row its own absolute query position
+(the row's query index 0 sits at absolute position ``q_offsets[row]``) —
+the decode hot path's contract, where a continuously-batched row decodes
+one token at its own ``pos`` against a shared-capacity paged cache. With
+offsets of 0 the masks reduce to the train/prefill causal forms bit-for-
+bit (the offset is an integer add into the same comparison).
+
 Sliding-window support doubles as the sub-quadratic path for the long_500k
 input shape on dense architectures (``configs.base.INPUT_SHAPES``; the
 window policy lives in ``launch.steps.effective_window``).
@@ -22,7 +36,7 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+def _kernel(off_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
             bq, bk, causal, window, scale, n_kv):
     iq = pl.program_id(1)
     ik = pl.program_id(2)
@@ -38,7 +52,8 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
     v = v_ref[0]
     s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
 
-    qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    off = off_ref[0, 0]                             # absolute pos of q row 0
+    qpos = off + iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
     kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
     ok = jnp.ones((bq, bk), dtype=bool)
     if causal:
@@ -67,10 +82,18 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
 def flash_attention_pallas(q, k, v, *, causal: bool = True, window=None,
                            bq: int = 128, bk: int = 128,
-                           interpret: bool = False):
-    """q,k,v: (BH, S, hd) — batch and heads pre-folded. Same head count for
-    k/v (GQA repeat happens in the wrapper)."""
+                           interpret: bool = False, kv_group: int = 1,
+                           q_offsets=None):
+    """q: (BH, Sq, hd); k, v: (BH // kv_group, Sk, hd) — batch and heads
+    pre-folded, q head-major so kv row = (bh // (K*G))*K + (bh % (K*G))//G.
+    ``q_offsets``: optional (BH,) int32 absolute position of each row's
+    first query (decode: the row's token position; default 0)."""
     bh, sq, hd = q.shape
+    if kv_group < 1 or bh % kv_group:
+        raise ValueError(f"kv_group={kv_group} must divide BH={bh}")
+    if k.shape[0] != bh // kv_group or v.shape[0] != bh // kv_group:
+        raise ValueError(f"k/v rows {k.shape[0]} != BH/kv_group "
+                         f"{bh // kv_group}")
     sk = k.shape[1]
     bq = min(bq, sq)
     while sq % bq:
@@ -81,14 +104,26 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True, window=None,
     n_kv = sk // bk
     grid = (bh, sq // bq, n_kv)
     scale = 1.0 / math.sqrt(hd)
+    if q_offsets is None:
+        q_offsets = jnp.zeros((bh,), jnp.int32)
+    offs = q_offsets.astype(jnp.int32).reshape(bh, 1)
+
+    # head-major q rows: bh = batch*H + head with H = K*G, so the kv row
+    # batch*K + head//G equals bh // G exactly (head < K*G) — the whole
+    # GQA group map is one floor-divide in the K/V index maps, and with
+    # kv_group == 1 it is the identity the pre-GQA wrapper compiled.
+    def kv_row(b, _g=kv_group):
+        return b // _g
+
     return pl.pallas_call(
         functools.partial(_kernel, bq=bq, bk=bk, causal=causal, window=window,
                           scale=scale, n_kv=n_kv),
         grid=grid,
         in_specs=[
+            pl.BlockSpec((1, 1), lambda b, i, j: (b, 0)),
             pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (kv_row(b), j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (kv_row(b), j, 0)),
         ],
         out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, sq, hd), q.dtype),
@@ -99,4 +134,4 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True, window=None,
             pltpu.VMEM((bq, hd), jnp.float32),
         ],
         interpret=interpret,
-    )(q, k, v)
+    )(offs, q, k, v)

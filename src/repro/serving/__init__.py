@@ -1,0 +1,23 @@
+"""Serving counterpart of the training Engine: continuous batching over a
+slot-recycled paged KV cache, trace-driven arrivals, and a latency-SLO
+planner (``repro.cluster.serving``).
+
+Layout mirrors the training side: ``paged_cache`` owns the storage
+(page pools + per-slot page tables + host allocator), ``decode`` owns the
+math (per-request-position decode step, bit-matching the dense ring
+buffer in ``models.layers``), ``engine`` owns the loop (admission,
+prefill, retire, obs instrumentation).
+"""
+from repro.serving.paged_cache import (PagedCacheSpec, PageAllocator,
+                                       init_pages)
+from repro.serving.decode import paged_attention_decode, paged_decode_step
+from repro.serving.engine import (Request, ServeReport, ContinuousServer,
+                                  poisson_trace, sample_requests,
+                                  static_serve_trace)
+
+__all__ = [
+    "PagedCacheSpec", "PageAllocator", "init_pages",
+    "paged_attention_decode", "paged_decode_step",
+    "Request", "ServeReport", "ContinuousServer",
+    "poisson_trace", "sample_requests", "static_serve_trace",
+]

@@ -1,0 +1,141 @@
+"""Paged decode: ``models.layers.attention_decode`` generalized to a
+per-request position vector over a page-table-indirected cache.
+
+Bitwise contract (pinned in ``tests/test_serving.py``): gathering a
+slot's pages yields exactly the dense ``(B, W, K, hd)`` ring buffer, the
+validity mask is the reference mask evaluated per batch row, and every
+einsum/softmax runs the same shapes in the same order — so logits from
+``paged_decode_step`` bit-match ``models.transformer.decode_step`` on the
+dense cache whenever the per-row positions agree. Masked (out-of-range /
+never-written / scratch-backed) cache entries cannot leak: their scores
+sit at ``-1e30`` so ``exp`` underflows to exactly ``0.0`` in fp32 before
+the value gather.
+
+Writes are recycle-safe by construction: gather the old page entry,
+``where(active, new, old)``, scatter back. Inactive slots' tables point
+at the reserved scratch page 0, so colliding scatter indices always carry
+identical payloads and the step stays deterministic as requests join and
+leave the batch — one compiled step, any population.
+
+``attn_impl="pallas"`` routes the score/value loop through the
+``flash_attention`` kernel with ``q_offsets=pos`` (each batch row's
+single query at its own absolute position). Flash decode requires a
+full (non-ring) cache: under a sliding window the ring wraps and slot
+order no longer equals position order, which the kernel's positional
+mask assumes — the XLA masked path stays the sliding-window fallback.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import moe as M
+
+
+def _valid_mask(pos: jax.Array, W: int, window: Optional[int]) -> jax.Array:
+    """Per-row ring validity, (B, W) bool — the reference mask from
+    ``attention_decode`` with ``pos`` promoted to a vector."""
+    slots = jnp.arange(W)[None, :]
+    posb = pos[:, None]
+    if window is not None:
+        base = posb - (posb % W)
+        abs_pos = jnp.where(slots <= (posb % W), base + slots,
+                            base - W + slots)
+    else:
+        abs_pos = jnp.broadcast_to(slots, (pos.shape[0], W))
+    valid = (abs_pos <= posb) & (abs_pos >= 0)
+    if window is not None:
+        valid &= abs_pos > (posb - window)
+    return valid
+
+
+def paged_attention_decode(p, x, k_pages, v_pages, table, pos, active,
+                           cfg: ArchConfig, *, window: Optional[int] = None,
+                           attn_impl: str = "xla"):
+    """One layer's decode over the paged pool.
+
+    x: (B,1,D) hidden; k_pages/v_pages: (P, page, K, hd) this layer's pool;
+    table: (B, max_pages) int32 page ids (0 = scratch); pos: (B,) int32
+    absolute position per slot; active: (B,) bool live-request mask.
+    Returns (out (B,1,D), (k_pages, v_pages)).
+    """
+    cd = cfg.dtype("compute")
+    B = x.shape[0]
+    _, page, K, hd = k_pages.shape
+    W = table.shape[1] * page
+
+    q, k, v = L._project_qkv(p, x, None, cfg)
+    posb = pos[:, None].astype(jnp.int32)            # (B, 1)
+    q = L.rope(q, posb, cfg.rope_theta)
+    k = L.rope(k, posb, cfg.rope_theta)
+
+    slot = pos % W if window is not None else pos
+    page_idx = slot // page
+    in_page = slot % page
+    pid = jnp.take_along_axis(table, page_idx[:, None], axis=1)[:, 0]  # (B,)
+
+    kn = k[:, 0].astype(k_pages.dtype)               # (B, K, hd)
+    vn = v[:, 0].astype(v_pages.dtype)
+    act = active[:, None, None]
+    oldk = k_pages[pid, in_page]
+    oldv = v_pages[pid, in_page]
+    k_pages = k_pages.at[pid, in_page].set(jnp.where(act, kn, oldk))
+    v_pages = v_pages.at[pid, in_page].set(jnp.where(act, vn, oldv))
+
+    ck = k_pages[table].reshape(B, W, K, hd)         # the dense ring view
+    cv = v_pages[table].reshape(B, W, K, hd)
+
+    if attn_impl == "pallas" and window is None:
+        from repro.kernels.flash_attention import ops as fa_ops
+        out = fa_ops.flash_attention(q, ck.astype(cd), cv.astype(cd),
+                                     causal=True, q_offsets=pos)
+    else:
+        valid = _valid_mask(pos, W, window)
+        scores = L._grouped_scores(q, ck.astype(cd)).astype(jnp.float32)
+        scores = scores + jnp.where(valid, 0.0, -1e30)[:, None, None, None, :]
+        w = jax.nn.softmax(scores, axis=-1).astype(cd)
+        out = L._apply_scores(w, cv.astype(cd))
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cd))
+    return y, (k_pages, v_pages)
+
+
+def paged_decode_step(params, pages, table, tokens, pos, active,
+                      cfg: ArchConfig, *, window: Optional[int] = None,
+                      attn_impl: str = "xla"):
+    """One continuous-batching decode step for dense/moe stacks.
+
+    pages: {"k","v"}: (L, P, page, K, hd); table: (B, max_pages) shared by
+    all layers; tokens: (B,1) int32; pos: (B,) int32; active: (B,) bool.
+    Returns (logits (B,1,V) fp32, new pages). Mirrors
+    ``transformer.decode_step``'s layer scan so the math bit-matches.
+    """
+    if window is None:
+        window = cfg.sliding_window
+    t = cfg.arch_type
+    if t not in ("dense", "moe"):
+        raise ValueError(f"paged decode supports dense/moe, not {t!r}")
+    x = L.embed(params["embed"], tokens, cfg)
+
+    def body(h, xs):
+        bp, kp, vp = xs
+        a, (nkp, nvp) = paged_attention_decode(
+            bp["attn"], L.rms_norm(h, bp["ln1"], cfg.norm_eps), kp, vp,
+            table, pos, active, cfg, window=window, attn_impl=attn_impl)
+        h = h + a
+        h2 = L.rms_norm(h, bp["ln2"], cfg.norm_eps)
+        if t == "dense":
+            h = h + L.mlp_forward(bp["mlp"], h2, cfg)
+        else:
+            y, _ = M.moe_forward(bp["moe"], h2, cfg)
+            h = h + y
+        return h, (nkp, nvp)
+
+    x, (nk, nv) = jax.lax.scan(body, x, (params["blocks"],
+                                         pages["k"], pages["v"]))
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], x, cfg)
+    return logits, {"k": nk, "v": nv}

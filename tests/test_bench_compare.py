@@ -133,6 +133,63 @@ def test_cli_exit_codes_and_markdown(tmp_path):
                          "--benches", "nope"]) == 2
 
 
+def test_floor_gate_value_vs_embedded_floor():
+    doc = {"bench": "serving",
+           "goodput_gate": {"name": "goodput_ratio", "rate": 10.0,
+                            "value": 4.9, "floor": 1.3},
+           "rows": [{"mode": "continuous", "rate": 10.0,
+                     "latency": _stats(100.0)}]}
+    floors = compare.extract_floors(doc)
+    assert len(floors) == 1
+    (name,) = floors
+    assert name == "[bench=serving].goodput_gate"
+    # timing extraction must NOT pick up the floor row (and vice versa)
+    assert set(compare.extract_metrics(doc)).isdisjoint(floors)
+
+    rep = compare.check_floors(floors, floors)
+    assert rep["failures"] == 0 and not rep["missing"]
+    assert rep["rows"][0]["status"] == "ok"
+
+    bad = {name: {**floors[name], "value": 1.1}}
+    rep = compare.check_floors(floors, bad)
+    assert rep["failures"] == 1
+    assert rep["rows"][0]["status"] == "below-floor"
+    # the gate reads the FRESH emission's floor: raising it is a code
+    # change, so a fresh floor above the fresh value fails even if the
+    # baseline floor would have passed
+    tight = {name: {**floors[name], "floor": 5.0}}
+    assert compare.check_floors(floors, tight)["failures"] == 1
+    # a vanished floor gate is a coverage shrink -> failure
+    rep = compare.check_floors(floors, {})
+    assert rep["missing"] == [name]
+
+
+def test_floor_gate_drives_cli_exit_code(tmp_path):
+    base_dir, fresh_dir = tmp_path / "base", tmp_path / "fresh"
+    base_dir.mkdir(), fresh_dir.mkdir()
+    doc = {"bench": "serving",
+           "rows": [{"mode": "continuous", "rate": 10.0,
+                     "latency": _stats(100.0)}],
+           "goodput_gate": {"name": "goodput_ratio", "value": 4.9,
+                            "floor": 1.3}}
+    _write(base_dir, "BENCH_serving.json", doc)
+    _write(fresh_dir, "BENCH_serving.json", doc)
+    assert compare.main([str(base_dir), str(fresh_dir)]) == 0
+
+    bad = json.loads(json.dumps(doc))
+    bad["goodput_gate"]["value"] = 1.0          # timing rows untouched
+    _write(fresh_dir, "BENCH_serving.json", bad)
+    md = tmp_path / "summary.md"
+    assert compare.main([str(base_dir), str(fresh_dir),
+                         "--markdown", str(md)]) == 1
+    assert "BELOW FLOOR" in md.read_text()
+
+    gone = json.loads(json.dumps(doc))
+    del gone["goodput_gate"]                    # coverage shrink
+    _write(fresh_dir, "BENCH_serving.json", gone)
+    assert compare.main([str(base_dir), str(fresh_dir)]) == 1
+
+
 def test_gate_on_committed_baselines_is_self_consistent():
     """The committed BENCH_*.json must pass the gate against themselves —
     guards against committing baselines the extractor cannot parse."""

@@ -150,6 +150,35 @@ else:
                                    rtol=3e-5, atol=3e-5)
 
 
+@pytest.mark.parametrize("h,kv", [(4, 2), (4, 1), (2, 2)])
+def test_flash_attention_gqa_no_repeat_bitwise(h, kv):
+    """GQA without materializing ``jnp.repeat``: the kernel's
+    query-head -> kv-head index mapping must be BITWISE equal to feeding
+    it explicitly repeated K/V (same blocks, same reduction order — the
+    wrapper only changed which rows the BlockSpec index maps fetch)."""
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (2, 64, h, 16))
+    k = jax.random.normal(ks[1], (2, 64, kv, 16))
+    v = jax.random.normal(ks[2], (2, 64, kv, 16))
+    grouped = fa_ops.flash_attention(q, k, v, causal=True, bq=32, bk=32,
+                                     interpret=True)
+    rep = h // kv
+    repeated = fa_ops.flash_attention(q, jnp.repeat(k, rep, axis=2),
+                                      jnp.repeat(v, rep, axis=2),
+                                      causal=True, bq=32, bk=32,
+                                      interpret=True)
+    assert np.array_equal(np.asarray(grouped), np.asarray(repeated))
+
+
+def test_flash_attention_rejects_indivisible_heads():
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (1, 32, 3, 8))
+    k = jax.random.normal(ks[1], (1, 32, 2, 8))
+    v = jax.random.normal(ks[2], (1, 32, 2, 8))
+    with pytest.raises(ValueError):
+        fa_ops.flash_attention(q, k, v, interpret=True)
+
+
 def test_flash_matches_model_attention_path():
     """models.layers.attention_forward(attn_impl='pallas') path parity."""
     from repro.configs.base import ArchConfig
