@@ -44,6 +44,8 @@ if _FLAG not in os.environ.get("XLA_FLAGS", ""):
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
 
 from repro.configs import get_smoke_config  # noqa: E402
 from repro.engine import timing  # noqa: E402
@@ -51,8 +53,10 @@ from repro.models import transformer as T  # noqa: E402
 from repro.obs import spans  # noqa: E402
 from repro.obs.meta import run_metadata  # noqa: E402
 from repro.obs.metrics import MetricRegistry  # noqa: E402
-from repro.serving import (ContinuousServer, poisson_trace,  # noqa: E402
-                           sample_requests, static_serve_trace)
+from repro.serving import (ContinuousServer, PageAllocator,  # noqa: E402
+                           PagedCacheSpec, init_pages, paged_decode_step,
+                           poisson_trace, sample_requests,
+                           static_serve_trace)
 
 
 def _lat_row(report) -> dict:
@@ -78,14 +82,114 @@ def _mode_row(report, *, mode: str, rate: float, slots: int, page: int,
     }
 
 
+def bench_decode_steps(cfg, params, *, slots: int, page_list, seed: int,
+                       capacity: int = 256, short: int = 64,
+                       iters: int = 50):
+    """Per-token decode-step cost, attention isolated by arm comparison.
+
+    Every arm times the SAME full decode step (stack, writes, unembed) on
+    the same random pools; only the attention gather width varies, so the
+    deltas are attention bandwidth:
+
+    - ``full@capacity``: full-width dense gather, row at position W-1 —
+      the old hot path at its design point.
+    - ``full@short``: full-width gather with only ``short`` live tokens —
+      what every request paid before the bucket ladder, regardless of
+      live context.
+    - ``bucket@short``: the gather narrowed to the live page bucket — the
+      served cost on a pool provisioned at ``capacity/short``x the live
+      context.
+
+    Emits the ``short_context_decode_speedup`` floor gate (full@short /
+    bucket@short, floor 1.5) per page size, and a ``paged_kernel_parity``
+    floor gate: the in-kernel Pallas walk (interpret mode on CPU) must
+    match the dense-gather logits — the correctness lane CI runs on every
+    push, so a kernel regression fails the perf gate, not just tests.
+    """
+    rows, gates = [], []
+    rng = np.random.default_rng(seed)
+    for page in page_list:
+        spec = PagedCacheSpec.for_config(cfg, num_slots=slots,
+                                         page_size=page, max_seq=capacity)
+        alloc = PageAllocator(spec)
+        for s in range(slots):
+            alloc.ensure(s, capacity)
+        table = jnp.asarray(alloc.tables)
+        pools = {k: jnp.asarray(rng.standard_normal(v.shape), v.dtype)
+                 for k, v in init_pages(spec).items()}
+        tok = jnp.asarray(rng.integers(cfg.vocab_size, size=(slots, 1)),
+                          jnp.int32)
+        active = jnp.ones((slots,), bool)
+
+        def step(gp, ctx, impl="xla"):
+            pos = jnp.full((slots,), ctx - 1, jnp.int32)
+
+            @jax.jit
+            def f(pools, tok):
+                logits, _ = paged_decode_step(
+                    params, pools, table, tok, pos, active, cfg,
+                    window=None, attn_impl=impl, gather_pages=gp)
+                return logits
+            return lambda: f(pools, tok)
+
+        arms = [("full@capacity", None, capacity),
+                ("full@short", None, short),
+                ("bucket@short", short // page, short)]
+        stats = {}
+        for variant, gp, ctx in arms:
+            st = timing.probe(step(gp, ctx), warmup=3, iters=iters)
+            stats[variant] = st
+            rows.append({"name": "decode_step", "impl": "xla",
+                         "page": page, "slots": slots, "variant": variant,
+                         "context": ctx,
+                         "gathered_pages": (gp if gp is not None
+                                            else spec.pages_per_slot),
+                         "step": st.row()})
+            print(f"decode_step page={page} {variant}: "
+                  f"{st.min_s * 1e6:.0f}us/step", flush=True)
+        speedup = stats["full@short"].min_s / stats["bucket@short"].min_s
+        gates.append({"name": "short_context_decode_speedup", "page": page,
+                      "slots": slots, "context": short,
+                      "value": speedup, "floor": 1.5})
+        print(f"decode_step page={page}: short-context speedup "
+              f"{speedup:.2f}x (floor 1.5)", flush=True)
+
+        # parity at the largest page = fewest interpret-mode grid steps
+        if page == max(page_list):
+            lx = np.asarray(step(None, short)(), np.float32)
+            lp = np.asarray(step(None, short, impl="pallas")(), np.float32)
+            diff = float(np.abs(lx - lp).max())
+            # tolerance scales with logit magnitude: smoke configs decode
+            # in bf16 (~0.8% eps), so parity is relative, not absolute
+            tol = 3e-2 * max(1.0, float(np.abs(lx).max()))
+            ok = diff <= tol
+            gates.append({"name": "paged_kernel_parity", "impl": "pallas",
+                          "page": page, "slots": slots,
+                          "max_abs_diff": diff,
+                          "value": 1.0 if ok else 0.0, "floor": 1.0})
+            print(f"paged kernel parity (interpret, page={page}): "
+                  f"max|d|={diff:.3e} -> {'ok' if ok else 'FAIL'}",
+                  flush=True)
+    return {"slots": slots, "capacity": capacity, "short_context": short,
+            "page_list": list(page_list), "rows": rows, "gates": gates}
+
+
 def run_bench(*, arch: str, rates, requests: int, slots: int, page: int,
-              seed: int, metrics_out: str = "", trace_out: str = ""):
+              seed: int, decode_pages=(8, 16, 32), decode_iters: int = 50,
+              metrics_out: str = "", trace_out: str = ""):
     cfg = get_smoke_config(arch)
     params = T.init_params(jax.random.PRNGKey(seed), cfg)
+    decode = bench_decode_steps(cfg, params, slots=slots,
+                                page_list=decode_pages, seed=seed,
+                                iters=decode_iters)
     pmax, gmax = 32, 32
     max_seq = -(-(pmax + gmax) // page) * page
     srv = ContinuousServer(cfg, params, slots=slots, page_size=page,
                            max_seq=max_seq, seed=seed)
+    # compile the whole decode gather ladder + prefill buckets up front:
+    # which bucket a step needs depends on wall-clock admission order, so
+    # an unmeasured trace run alone cannot guarantee compile coverage
+    srv.warmup(range(1, pmax + 1))
     gate_rate = min(rates)
     reports = {}
     with spans.maybe_traced(bool(trace_out)) as tracer:
@@ -156,7 +260,7 @@ def run_bench(*, arch: str, rates, requests: int, slots: int, page: int,
                                    "are per-request min+median+iqr",
                        "slo": "1.5x measured continuous p99 at the "
                               "lowest rate"},
-            "rows": rows, "goodput_gate": gate}
+            "rows": rows, "goodput_gate": gate, "decode_step": decode}
 
 
 def main(argv=None) -> int:
@@ -185,6 +289,8 @@ def main(argv=None) -> int:
 
     out = run_bench(arch=args.arch, rates=rates, requests=requests,
                     slots=slots, page=args.page_size, seed=args.seed,
+                    decode_pages=(16,) if args.smoke else (8, 16, 32),
+                    decode_iters=10 if args.smoke else 50,
                     metrics_out=args.metrics_out, trace_out=args.trace_out)
     args.out.write_text(json.dumps(out, indent=2))
     print(f"wrote {args.out}")

@@ -79,7 +79,10 @@ def _extract(node, match, prefix: str = "") -> dict:
     out = {}
     if isinstance(node, dict):
         if match <= set(node):
-            out[prefix or "root"] = node
+            # an identified matching row names itself — several floor
+            # gates sharing one list must not collapse onto one metric
+            ident = _ident(node)
+            out[f"{prefix}[{ident}]" if ident else (prefix or "root")] = node
             return out
         ident = _ident(node)
         base = f"{prefix}[{ident}]" if ident else prefix

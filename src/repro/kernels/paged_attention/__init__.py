@@ -1,0 +1,6 @@
+from repro.kernels.paged_attention.ops import paged_attention
+from repro.kernels.paged_attention.paged_attention import paged_attention_pallas
+from repro.kernels.paged_attention.ref import paged_attention_ref, valid_mask
+
+__all__ = ["paged_attention", "paged_attention_pallas",
+           "paged_attention_ref", "valid_mask"]

@@ -1,0 +1,52 @@
+"""Dense-gather oracle for paged decode attention.
+
+Materializes exactly the ``(B, W, K, hd)`` ring view the pre-kernel
+serving hot path gathered (``pool[table].reshape``), applies the
+reference per-row validity mask, and runs the same grouped einsum /
+softmax as ``serving.decode``'s XLA arm — the equality target the
+in-kernel page walk is pinned against (full + sliding windows, ring
+wrap, recycled slots, scratch-backed rows).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def valid_mask(pos: jax.Array, W: int, window: Optional[int]) -> jax.Array:
+    """Per-row ring validity, (B, W) bool: which of the W gathered slots
+    hold positions row b may attend to at ``pos[b]``."""
+    slots = jnp.arange(W)[None, :]
+    posb = pos[:, None]
+    if window is not None:
+        base = posb - (posb % W)
+        abs_pos = jnp.where(slots <= (posb % W), base + slots,
+                            base - W + slots)
+    else:
+        abs_pos = jnp.broadcast_to(slots, (pos.shape[0], W))
+    valid = (abs_pos <= posb) & (abs_pos >= 0)
+    if window is not None:
+        valid &= abs_pos > (posb - window)
+    return valid
+
+
+def paged_attention_ref(q, k_pages, v_pages, table, pos, *, window=None):
+    """Same signature/layout as ``ops.paged_attention`` (q: (B,1,H,hd)),
+    computed via the dense gathered copy."""
+    b, sq, h, hd = q.shape
+    _, page, kh, _ = k_pages.shape
+    W = table.shape[1] * page
+    g = h // kh
+    ck = k_pages[table].reshape(b, W, kh, hd)
+    cv = v_pages[table].reshape(b, W, kh, hd)
+    qg = q.reshape(b, sq, kh, g, hd)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, ck) / math.sqrt(hd)
+    s = s.astype(jnp.float32)
+    ok = valid_mask(pos, W, window)
+    s = s + jnp.where(ok, 0.0, -1e30)[:, None, None, None, :]
+    w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, cv)
+    return out.reshape(b, sq, h, hd)

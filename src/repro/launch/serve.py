@@ -91,8 +91,11 @@ def _run_continuous(cfg, args, registry: MetricRegistry):
     params = T.init_params(jax.random.PRNGKey(args.seed), cfg)
     srv = ContinuousServer(cfg, params, slots=args.batch,
                            page_size=args.page_size, max_seq=max_seq,
-                           attn_impl=args.attn_impl, registry=registry,
+                           attn_impl=args.attn_impl,
+                           gather_mode=args.gather_mode, registry=registry,
                            seed=args.seed)
+    for note in registry.notes:           # e.g. pallas_gather ring fallback
+        print(f"note: {note}")
     srv.warmup([pmax])
     rep = srv.run(reqs)
     base = static_serve_trace(cfg, reqs, batch=args.batch, params=params)
@@ -131,7 +134,18 @@ def main(argv=None):
                          "instead of drawing Poisson arrivals")
     ap.add_argument("--slo-ms", type=float, default=500.0)
     ap.add_argument("--page-size", type=int, default=16)
-    ap.add_argument("--attn-impl", choices=("xla", "pallas"), default="xla")
+    ap.add_argument("--attn-impl",
+                    choices=("xla", "pallas", "pallas_gather"),
+                    default="xla",
+                    help="continuous decode attention: 'pallas' = in-kernel "
+                         "paged walk, 'xla' = masked bucketed gather, "
+                         "'pallas_gather' = legacy flash-over-a-copy "
+                         "(falls back to xla under sliding windows, loudly)")
+    ap.add_argument("--gather-mode", choices=("bucket", "full"),
+                    default="bucket",
+                    help="xla/pallas_gather decode: narrow the dense gather "
+                         "to the batch's live page bucket, or pin the "
+                         "full-capacity bitwise baseline")
     ap.add_argument("--metrics-out", type=str, default="",
                     help="write the obs metric stream (JSONL) here")
     ap.add_argument("--trace-out", type=str, default="",

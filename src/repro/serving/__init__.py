@@ -10,14 +10,15 @@ prefill, retire, obs instrumentation).
 """
 from repro.serving.paged_cache import (PagedCacheSpec, PageAllocator,
                                        init_pages)
-from repro.serving.decode import paged_attention_decode, paged_decode_step
+from repro.serving.decode import (ATTN_IMPLS, paged_attention_decode,
+                                  paged_decode_step)
 from repro.serving.engine import (Request, ServeReport, ContinuousServer,
                                   poisson_trace, sample_requests,
                                   static_serve_trace)
 
 __all__ = [
     "PagedCacheSpec", "PageAllocator", "init_pages",
-    "paged_attention_decode", "paged_decode_step",
+    "ATTN_IMPLS", "paged_attention_decode", "paged_decode_step",
     "Request", "ServeReport", "ContinuousServer",
     "poisson_trace", "sample_requests", "static_serve_trace",
 ]

@@ -17,12 +17,27 @@ at the reserved scratch page 0, so colliding scatter indices always carry
 identical payloads and the step stays deterministic as requests join and
 leave the batch — one compiled step, any population.
 
-``attn_impl="pallas"`` routes the score/value loop through the
-``flash_attention`` kernel with ``q_offsets=pos`` (each batch row's
-single query at its own absolute position). Flash decode requires a
-full (non-ring) cache: under a sliding window the ring wraps and slot
-order no longer equals position order, which the kernel's positional
-mask assumes — the XLA masked path stays the sliding-window fallback.
+Attention implementations (``attn_impl``):
+
+- ``"pallas"`` — the in-kernel paged flash-decode
+  (``repro.kernels.paged_attention``): the K/V BlockSpec index maps walk
+  the page table inside the kernel, pages are consumed in place with no
+  dense copy, per-row ``pos`` bounds the live page walk, and a
+  ring-aware mask covers sliding windows — no fallback.
+- ``"xla"`` — the masked dense-gather reference. ``gather_pages``
+  (static) narrows the gather to the batch's live high-water page count:
+  the view becomes the FIRST ``gather_pages`` ring slots and the mask its
+  matching columns, so bandwidth follows live context even without
+  Pallas. ``gather_pages=None`` (or ``= max_pages``) is the full-width
+  bitwise baseline arm; narrowed widths re-tile XLA's reductions, so
+  cross-width equality is token-level, like any batch-width change.
+- ``"pallas_gather"`` — the legacy hot path kept as a bench arm: the
+  ``flash_attention`` kernel over the full gathered copy
+  (``q_offsets=pos``). Flash-on-a-copy requires a full (non-ring) cache:
+  under a sliding window the ring wraps and slot order no longer equals
+  position order, so this arm falls back to the XLA masked path — the
+  server surfaces that fallback (warning + obs note) instead of hiding
+  it.
 """
 from __future__ import annotations
 
@@ -32,41 +47,32 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.kernels.paged_attention.ref import valid_mask as _valid_mask
 from repro.models import layers as L
 from repro.models import moe as M
 
-
-def _valid_mask(pos: jax.Array, W: int, window: Optional[int]) -> jax.Array:
-    """Per-row ring validity, (B, W) bool — the reference mask from
-    ``attention_decode`` with ``pos`` promoted to a vector."""
-    slots = jnp.arange(W)[None, :]
-    posb = pos[:, None]
-    if window is not None:
-        base = posb - (posb % W)
-        abs_pos = jnp.where(slots <= (posb % W), base + slots,
-                            base - W + slots)
-    else:
-        abs_pos = jnp.broadcast_to(slots, (pos.shape[0], W))
-    valid = (abs_pos <= posb) & (abs_pos >= 0)
-    if window is not None:
-        valid &= abs_pos > (posb - window)
-    return valid
+ATTN_IMPLS = ("xla", "pallas", "pallas_gather")
 
 
 def paged_attention_decode(p, x, k_pages, v_pages, table, pos, active,
                            cfg: ArchConfig, *, window: Optional[int] = None,
-                           attn_impl: str = "xla"):
+                           attn_impl: str = "xla",
+                           gather_pages: Optional[int] = None):
     """One layer's decode over the paged pool.
 
     x: (B,1,D) hidden; k_pages/v_pages: (P, page, K, hd) this layer's pool;
     table: (B, max_pages) int32 page ids (0 = scratch); pos: (B,) int32
     absolute position per slot; active: (B,) bool live-request mask.
+    ``gather_pages`` (static, XLA path only): gather just the first
+    ``gather_pages`` table columns — must cover every live row's pages
+    (the server's bucket ladder guarantees it).
     Returns (out (B,1,D), (k_pages, v_pages)).
     """
     cd = cfg.dtype("compute")
     B = x.shape[0]
     _, page, K, hd = k_pages.shape
-    W = table.shape[1] * page
+    max_pages = table.shape[1]
+    W = max_pages * page
 
     q, k, v = L._project_qkv(p, x, None, cfg)
     posb = pos[:, None].astype(jnp.int32)            # (B, 1)
@@ -86,26 +92,38 @@ def paged_attention_decode(p, x, k_pages, v_pages, table, pos, active,
     k_pages = k_pages.at[pid, in_page].set(jnp.where(act, kn, oldk))
     v_pages = v_pages.at[pid, in_page].set(jnp.where(act, vn, oldv))
 
-    ck = k_pages[table].reshape(B, W, K, hd)         # the dense ring view
-    cv = v_pages[table].reshape(B, W, K, hd)
-
-    if attn_impl == "pallas" and window is None:
-        from repro.kernels.flash_attention import ops as fa_ops
-        out = fa_ops.flash_attention(q, ck.astype(cd), cv.astype(cd),
-                                     causal=True, q_offsets=pos)
+    if attn_impl == "pallas":
+        from repro.kernels.paged_attention import ops as pa_ops
+        out = pa_ops.paged_attention(q, k_pages, v_pages, table, pos,
+                                     window=window)
     else:
-        valid = _valid_mask(pos, W, window)
-        scores = L._grouped_scores(q, ck.astype(cd)).astype(jnp.float32)
-        scores = scores + jnp.where(valid, 0.0, -1e30)[:, None, None, None, :]
-        w = jax.nn.softmax(scores, axis=-1).astype(cd)
-        out = L._apply_scores(w, cv.astype(cd))
+        gp = max_pages if gather_pages is None else min(gather_pages,
+                                                        max_pages)
+        tb = table if gp == max_pages else table[:, :gp]
+        Wb = gp * page
+        ck = k_pages[tb].reshape(B, Wb, K, hd)       # the dense ring view
+        cv = v_pages[tb].reshape(B, Wb, K, hd)
+        if attn_impl == "pallas_gather" and window is None:
+            from repro.kernels.flash_attention import ops as fa_ops
+            out = fa_ops.flash_attention(q, ck.astype(cd), cv.astype(cd),
+                                         causal=True, q_offsets=pos)
+        else:
+            # the mask is the full-ring reference evaluated per row, cut
+            # to the gathered columns (the first Wb ring slots)
+            valid = _valid_mask(pos, W, window)[:, :Wb]
+            scores = L._grouped_scores(q, ck.astype(cd)).astype(jnp.float32)
+            scores = scores + jnp.where(valid, 0.0,
+                                        -1e30)[:, None, None, None, :]
+            w = jax.nn.softmax(scores, axis=-1).astype(cd)
+            out = L._apply_scores(w, cv.astype(cd))
     y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cd))
     return y, (k_pages, v_pages)
 
 
 def paged_decode_step(params, pages, table, tokens, pos, active,
                       cfg: ArchConfig, *, window: Optional[int] = None,
-                      attn_impl: str = "xla"):
+                      attn_impl: str = "xla",
+                      gather_pages: Optional[int] = None):
     """One continuous-batching decode step for dense/moe stacks.
 
     pages: {"k","v"}: (L, P, page, K, hd); table: (B, max_pages) shared by
@@ -115,6 +133,9 @@ def paged_decode_step(params, pages, table, tokens, pos, active,
     """
     if window is None:
         window = cfg.sliding_window
+    if attn_impl not in ATTN_IMPLS:
+        raise ValueError(f"attn_impl must be one of {ATTN_IMPLS}, "
+                         f"not {attn_impl!r}")
     t = cfg.arch_type
     if t not in ("dense", "moe"):
         raise ValueError(f"paged decode supports dense/moe, not {t!r}")
@@ -124,7 +145,8 @@ def paged_decode_step(params, pages, table, tokens, pos, active,
         bp, kp, vp = xs
         a, (nkp, nvp) = paged_attention_decode(
             bp["attn"], L.rms_norm(h, bp["ln1"], cfg.norm_eps), kp, vp,
-            table, pos, active, cfg, window=window, attn_impl=attn_impl)
+            table, pos, active, cfg, window=window, attn_impl=attn_impl,
+            gather_pages=gather_pages)
         h = h + a
         h2 = L.rms_norm(h, bp["ln2"], cfg.norm_eps)
         if t == "dense":

@@ -32,12 +32,28 @@ Prefill modes:
   prefill hot path — numerically allclose to scan, not bitwise
   (parallel vs stepwise attention reduction order). Full-window caches
   only: a ring-wrapped scatter would need last-writer selection.
+
+Decode cost tracks live context, not pool capacity:
+- ``attn_impl="pallas"`` routes decode (and the scan-prefill inner
+  step) through the in-kernel paged-attention walk
+  (``repro.kernels.paged_attention``) — no dense gather at all, per-row
+  positions bound the page walk, sliding windows included.
+- the XLA path gathers only up to the batch's live high-water page
+  count, bucketed to a power-of-two page ladder (``gather_mode=
+  "bucket"``) so changing populations reuse compiled steps;
+  ``gather_mode="full"`` pins the full-capacity gather — the bitwise
+  baseline arm.
+- ``attn_impl="pallas_gather"`` (the legacy flash-over-a-copy hot path)
+  cannot represent a wrapped ring: under a sliding window it falls back
+  to the XLA path, and the server says so — ``warnings.warn`` +
+  ``registry.note`` — instead of silently switching.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, List, Optional, Sequence
+import warnings
+from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -49,7 +65,7 @@ from repro.exec.trace import EventTrace
 from repro.models import transformer as T
 from repro.obs import spans
 from repro.obs.metrics import MetricRegistry
-from repro.serving.decode import paged_decode_step
+from repro.serving.decode import ATTN_IMPLS, paged_decode_step
 from repro.serving.paged_cache import PagedCacheSpec, PageAllocator, init_pages
 
 
@@ -152,7 +168,8 @@ class ContinuousServer:
     def __init__(self, cfg: ArchConfig, params=None, *, slots: int = 8,
                  page_size: int = 16, max_seq: int = 256,
                  window: Optional[int] = "config", attn_impl: str = "xla",
-                 prefill_mode: str = "scan", seed: int = 0,
+                 prefill_mode: str = "scan", gather_mode: str = "bucket",
+                 seed: int = 0,
                  registry: Optional[MetricRegistry] = None,
                  extra_pages: int = 0):
         if window == "config":
@@ -161,10 +178,16 @@ class ContinuousServer:
             raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
         if prefill_mode == "parallel" and window is not None:
             raise ValueError("parallel prefill needs a full (non-ring) cache")
+        if attn_impl not in ATTN_IMPLS:
+            raise ValueError(f"attn_impl must be one of {ATTN_IMPLS}, "
+                             f"not {attn_impl!r}")
+        if gather_mode not in ("bucket", "full"):
+            raise ValueError(f"unknown gather_mode {gather_mode!r}")
         self.cfg = cfg
         self.window = window
         self.attn_impl = attn_impl
         self.prefill_mode = prefill_mode
+        self.gather_mode = gather_mode
         self.params = params if params is not None else T.init_params(
             jax.random.PRNGKey(seed), cfg)
         self.spec = PagedCacheSpec.for_config(
@@ -174,19 +197,37 @@ class ContinuousServer:
         self.pages = init_pages(self.spec)
         self.registry = registry if registry is not None else MetricRegistry()
 
+        # the one remaining impl fallback, made loud: flash-over-a-copy
+        # cannot express a wrapped ring, so sliding windows run the XLA
+        # masked path — warn once and pin it in the metric stream's notes
+        self._fallback_note: Optional[str] = None
+        if attn_impl == "pallas_gather" and window is not None:
+            self._fallback_note = (
+                "attn_impl='pallas_gather' cannot run a sliding-window "
+                f"(window={window}) ring cache: slot order != position "
+                "order after wrap breaks the flash kernel's positional "
+                "mask; decode falls back to the masked XLA path "
+                "(attn_impl='pallas' walks the page table in-kernel and "
+                "has no such fallback)")
+            warnings.warn(self._fallback_note, stacklevel=2)
+            self.registry.note(self._fallback_note)
+
         S = self.spec.num_slots
         win, impl = self.window, self.attn_impl
 
-        def _step(params, pages, table, tokens, pos, active):
+        def _step(params, pages, table, tokens, pos, active, *,
+                  gather_pages: Optional[int] = None):
             logits, pages = paged_decode_step(
                 params, pages, table, tokens, pos, active, cfg,
-                window=win, attn_impl=impl)
+                window=win, attn_impl=impl, gather_pages=gather_pages)
             return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), pages
 
-        self._step = jax.jit(_step, donate_argnums=(1,))
-        self._prefill_cache: Dict[int, object] = {}
+        self._step_impl = _step
+        self._step_cache: Dict[Optional[int], Callable] = {}
+        self._prefill_cache: Dict[tuple, Callable] = {}
 
-        def _scan_prefill(params, pages, table, prompts, plens, admit):
+        def _scan_prefill(params, pages, table, prompts, plens, admit, *,
+                          gather_pages: Optional[int] = None):
             Pb = prompts.shape[1]
 
             def body(pg, t):
@@ -194,14 +235,16 @@ class ContinuousServer:
                 act = admit & (t < plens)
                 logits, pg = paged_decode_step(
                     params, pg, table, tok, jnp.full((S,), t, jnp.int32),
-                    act, cfg, window=win, attn_impl=impl)
+                    act, cfg, window=win, attn_impl=impl,
+                    gather_pages=gather_pages)
                 return pg, jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
 
             pages, toks = jax.lax.scan(body, pages,
                                        jnp.arange(Pb, dtype=jnp.int32))
             return pages, toks                       # toks: (Pb, S)
 
-        def _parallel_prefill(params, pages, table, prompts, plens, admit):
+        def _parallel_prefill(params, pages, table, prompts, plens, admit, *,
+                              gather_pages: Optional[int] = None):
             B, Pb = prompts.shape
             page = self.spec.page_size
             logits, _, cache = T.forward(params, {"tokens": prompts}, cfg,
@@ -234,25 +277,84 @@ class ContinuousServer:
         self.pages = init_pages(self.spec)
         if registry is not None:
             self.registry = registry
+            if self._fallback_note is not None:
+                self.registry.note(self._fallback_note)
 
-    def _prefill_fn(self, Pb: int):
-        fn = self._prefill_cache.get(Pb)
+    def _uses_gather(self) -> bool:
+        """Does the decode step materialize a dense gathered view at all?
+        ``"pallas"`` walks the table in-kernel; everything else gathers."""
+        return self.attn_impl != "pallas"
+
+    def _step_fn(self, gather_pages: Optional[int]) -> Callable:
+        """Compiled decode step for one static gather width (None = full
+        capacity — the bitwise baseline). One entry per ladder rung."""
+        fn = self._step_cache.get(gather_pages)
         if fn is None:
-            fn = jax.jit(self._prefill_impl, donate_argnums=(1,))
-            self._prefill_cache[Pb] = fn
+            fn = jax.jit(
+                functools.partial(self._step_impl, gather_pages=gather_pages),
+                donate_argnums=(1,))
+            self._step_cache[gather_pages] = fn
         return fn
 
+    def _gather_bucket(self, slot_pos: np.ndarray,
+                       active: np.ndarray) -> Optional[int]:
+        """The batch's live high-water page count, rounded up the
+        power-of-two ladder. Active rows only: retired slots keep stale
+        positions that must not widen (or overrun) the gather. None means
+        full width — pallas (no gather), ``gather_mode="full"``, or a
+        batch already at capacity."""
+        if self.gather_mode == "full" or not self._uses_gather():
+            return None
+        if not active.any():
+            return None
+        live = min(int(slot_pos[active].max()) + 1, self.spec.seq_capacity)
+        gp = _bucket(-(-live // self.spec.page_size), self.spec.pages_per_slot)
+        return None if gp >= self.spec.pages_per_slot else gp
+
+    def _prefill_gather(self, Pb: int) -> Optional[int]:
+        """Gather width for a scan prefill over a ``Pb``-bucket prompt:
+        positions stay < Pb, and non-admitted rows' outputs are discarded,
+        so the view only needs the prompt's own pages."""
+        if self.gather_mode == "full" or not self._uses_gather():
+            return None
+        live = min(Pb, self.spec.seq_capacity)
+        gp = _bucket(-(-live // self.spec.page_size), self.spec.pages_per_slot)
+        return None if gp >= self.spec.pages_per_slot else gp
+
+    def _prefill_fn(self, Pb: int):
+        key = (Pb, self._prefill_gather(Pb))
+        fn = self._prefill_cache.get(key)
+        if fn is None:
+            fn = jax.jit(
+                functools.partial(self._prefill_impl, gather_pages=key[1]),
+                donate_argnums=(1,))
+            self._prefill_cache[key] = fn
+        return fn
+
+    def _gather_ladder(self) -> List[Optional[int]]:
+        """Every gather width a run can request: the full-capacity arm
+        plus (in bucket mode) each power-of-two rung below capacity."""
+        ladder: List[Optional[int]] = [None]
+        if self.gather_mode == "bucket" and self._uses_gather():
+            gp = 1
+            while gp < self.spec.pages_per_slot:
+                ladder.append(gp)
+                gp <<= 1
+        return ladder
+
     def warmup(self, prompt_lens: Sequence[int] = ()) -> None:
-        """Compile the decode step and the prefill buckets for the given
-        prompt lengths without touching any state: an all-inactive call
-        writes back exactly what it reads."""
+        """Compile the decode-step gather ladder and the prefill buckets
+        for the given prompt lengths without touching any state: an
+        all-inactive call writes back exactly what it reads."""
         S = self.spec.num_slots
         table = jnp.asarray(self.alloc.tables)
         off = jnp.zeros((S,), jnp.int32)
         inact = jnp.zeros((S,), bool)
-        tok, self.pages = self._step(self.params, self.pages, table,
-                                     jnp.zeros((S, 1), jnp.int32), off, inact)
-        jax.block_until_ready(tok)
+        for gp in self._gather_ladder():
+            tok, self.pages = self._step_fn(gp)(
+                self.params, self.pages, table,
+                jnp.zeros((S, 1), jnp.int32), off, inact)
+            jax.block_until_ready(tok)
         cap = self.spec.seq_capacity if self.window is None else None
         for p in sorted({_bucket(int(p), cap) for p in prompt_lens}):
             fn = self._prefill_fn(p)
@@ -393,9 +495,12 @@ class ContinuousServer:
             occupancy.append(int(active.sum()), step=steps)
             occ_gauge.set(int(active.sum()))
             pages_gauge.set(alloc.pages_in_use)
+            gp = self._gather_bucket(slot_pos, active)
             tstep = now()
-            with spans.span("serve.decode_step", occupancy=int(active.sum())):
-                tok, self.pages = self._step(
+            with spans.span("serve.decode_step", occupancy=int(active.sum()),
+                            gather=(gp if gp is not None
+                                    else spec.pages_per_slot)):
+                tok, self.pages = self._step_fn(gp)(
                     self.params, self.pages, jnp.asarray(alloc.tables),
                     jnp.asarray(slot_tok[:, None]), jnp.asarray(slot_pos),
                     jnp.asarray(active))

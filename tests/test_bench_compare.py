@@ -142,9 +142,17 @@ def test_floor_gate_value_vs_embedded_floor():
     floors = compare.extract_floors(doc)
     assert len(floors) == 1
     (name,) = floors
-    assert name == "[bench=serving].goodput_gate"
+    # an identified gate names itself, so several gates sharing a list
+    # (e.g. the per-page decode speedup floors) cannot collapse onto one
+    # metric and silently un-gate each other
+    assert name == "[bench=serving].goodput_gate[name=goodput_ratio,rate=10.0]"
     # timing extraction must NOT pick up the floor row (and vice versa)
     assert set(compare.extract_metrics(doc)).isdisjoint(floors)
+
+    many = {"bench": "serving",
+            "gates": [{"name": "speedup", "page": p, "value": 2.0,
+                       "floor": 1.5} for p in (8, 16, 32)]}
+    assert len(compare.extract_floors(many)) == 3
 
     rep = compare.check_floors(floors, floors)
     assert rep["failures"] == 0 and not rep["missing"]

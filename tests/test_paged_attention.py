@@ -1,0 +1,186 @@
+"""In-kernel paged flash-decode vs the dense-gather oracle.
+
+The contract under test: ``kernels.paged_attention`` walking the page
+table *inside* the kernel (interpret mode on CPU) computes the same
+attention as gathering the pages into the dense ``(B, W, K, hd)`` ring
+view and running the masked reference — full and sliding windows, ring
+wrap, permuted page tables, GQA group sizes, stale retired-slot rows —
+and that masked / scratch-backed pool entries cannot leak a single bit
+into the value reduction.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig, MoEConfig
+from repro.kernels.paged_attention import (paged_attention,
+                                           paged_attention_ref, valid_mask)
+from repro.models import transformer as T
+from repro.serving import (PageAllocator, PagedCacheSpec, init_pages,
+                           paged_decode_step)
+
+
+def _setup(B=3, K=2, G=2, hd=16, page=4, n_pages=4, seed=0,
+           dtype=np.float32):
+    """Random pools + a permuted table (each row owns distinct physical
+    pages, in shuffled order — the allocator's recycle pattern)."""
+    rng = np.random.default_rng(seed)
+    P = 1 + B * n_pages                       # + reserved scratch page 0
+    kp = rng.standard_normal((P, page, K, hd)).astype(dtype)
+    vp = rng.standard_normal((P, page, K, hd)).astype(dtype)
+    table = rng.permutation(np.arange(1, P)).reshape(B, n_pages)
+    q = rng.standard_normal((B, 1, K * G, hd)).astype(dtype)
+    return (jnp.asarray(q), jnp.asarray(kp), jnp.asarray(vp),
+            jnp.asarray(table.astype(np.int32)))
+
+
+@pytest.mark.parametrize("window,pos", [
+    (None, [0, 5, 15]),      # fresh row, mid-page, last slot of capacity
+    (16, [3, 16, 30]),       # ring: pre-wrap, first wrap, near-2x wrap
+    (24, [3, 19, 30]),       # window wider than the ring (W=16 < 24)
+])
+def test_kernel_matches_dense_gather_ref(window, pos):
+    q, kp, vp, table = _setup()
+    pos = jnp.asarray(pos, jnp.int32)
+    out = paged_attention(q, kp, vp, table, pos, window=window)
+    ref = paged_attention_ref(q, kp, vp, table, pos, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("K,G", [(1, 4), (4, 1), (2, 4)])
+def test_gqa_group_sizes(K, G):
+    """Repeat-free GQA: every (kv-head, group) pairing, including MQA
+    (K=1) and MHA (G=1), matches the grouped-einsum reference."""
+    q, kp, vp, table = _setup(K=K, G=G, seed=K * 7 + G)
+    pos = jnp.asarray([2, 9, 14], jnp.int32)
+    out = paged_attention(q, kp, vp, table, pos, window=None)
+    ref = paged_attention_ref(q, kp, vp, table, pos, window=None)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_bf16_pools():
+    """The serving smoke config decodes bf16 pools; accumulation is fp32
+    in-kernel either way."""
+    q, kp, vp, table = _setup(seed=11)
+    q, kp, vp = (x.astype(jnp.bfloat16) for x in (q, kp, vp))
+    pos = jnp.asarray([1, 7, 13], jnp.int32)
+    out = paged_attention(q, kp, vp, table, pos, window=None)
+    assert out.dtype == jnp.bfloat16
+    ref = paged_attention_ref(q, kp, vp, table, pos, window=None)
+    np.testing.assert_allclose(np.asarray(out, dtype=np.float32),
+                               np.asarray(ref, dtype=np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_stale_retired_row_cannot_overrun_or_perturb():
+    """A retired slot keeps its stale position (possibly >> capacity) and
+    a scratch-backed table row. The kernel must clamp its walk (no
+    out-of-bounds page index), return finite garbage for that row, and
+    leave live rows' outputs untouched down to the bit."""
+    q, kp, vp, table = _setup(B=2, seed=5)
+    live = jnp.asarray([5, 9], jnp.int32)
+    base = paged_attention(q, kp, vp, table, live, window=None)
+
+    stale_table = table.at[1].set(0)                  # all-scratch row
+    stale_pos = live.at[1].set(7 * 16 + 3)            # way past capacity
+    out = paged_attention(q, kp, vp, stale_table, stale_pos, window=None)
+    assert np.isfinite(np.asarray(out)).all()
+    assert np.array_equal(np.asarray(out[0]), np.asarray(base[0]))
+
+
+@pytest.mark.parametrize("window,pos", [
+    (None, [2, 9, 14]),
+    (16, [2, 9, 20]),        # row 2 wrapped: every ring slot is valid
+])
+def test_masked_entries_cannot_leak(window, pos):
+    """Poison every pool entry the mask excludes (dead-tail slots beyond
+    each row's position, plus the scratch page) with huge finite garbage:
+    the output must not move by a single bit."""
+    q, kp, vp, table = _setup(seed=8)
+    page = kp.shape[1]
+    W = table.shape[1] * page
+    pos = jnp.asarray(pos, jnp.int32)
+    clean = paged_attention(q, kp, vp, table, pos, window=window)
+
+    ok = np.asarray(valid_mask(pos, W, window))       # (B, W)
+    kp_p, vp_p = np.asarray(kp).copy(), np.asarray(vp).copy()
+    kp_p[0], vp_p[0] = 1e9, 1e9                       # scratch page
+    tbl = np.asarray(table)
+    for b in range(tbl.shape[0]):
+        for s in np.nonzero(~ok[b])[0]:
+            kp_p[tbl[b, s // page], s % page] = 1e9
+            vp_p[tbl[b, s // page], s % page] = 1e9
+    assert (~ok).any() or window is not None          # poisoned something
+    out = paged_attention(q, jnp.asarray(kp_p), jnp.asarray(vp_p),
+                          table, pos, window=window)
+    assert np.array_equal(np.asarray(out), np.asarray(clean))
+
+
+def test_shape_validation():
+    q, kp, vp, table = _setup()
+    pos = jnp.zeros((3,), jnp.int32)
+    with pytest.raises(ValueError, match="one query token"):
+        paged_attention(jnp.concatenate([q, q], axis=1), kp, vp, table, pos)
+    with pytest.raises(ValueError, match="multiple of"):
+        paged_attention(q[:, :, :3], kp, vp, table, pos)
+    with pytest.raises(ValueError, match="exceeds"):
+        paged_attention(q, kp, vp, table, pos, window=8)   # ring W=16 > 8
+
+
+# ---------------------------------------------------------------------------
+# the kernel inside the serving decode step
+# ---------------------------------------------------------------------------
+
+def _cfg(arch_type="dense", window=None):
+    moe = (MoEConfig(num_experts=4, top_k=2, d_ff_expert=32)
+           if arch_type == "moe" else None)
+    return ArchConfig(name=f"pa-{arch_type}-w{window}", arch_type=arch_type,
+                      num_layers=2, d_model=32, num_heads=2, num_kv_heads=1,
+                      head_dim=16, d_ff=32, vocab_size=64, moe=moe,
+                      sliding_window=window, compute_dtype="float32",
+                      remat=False)
+
+
+@pytest.mark.parametrize("arch_type,window", [
+    ("dense", None), ("dense", 8), ("moe", None),
+])
+def test_decode_step_pallas_matches_xla(arch_type, window):
+    """Full decode stacks (dense and MoE, GQA heads, ring included)
+    through ``attn_impl="pallas"`` vs the masked XLA gather — logits
+    allclose at every step, cache writes identical."""
+    cfg = _cfg(arch_type, window)
+    B = 2
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    spec = PagedCacheSpec.for_config(cfg, num_slots=B, page_size=4,
+                                     max_seq=16, window=window)
+    alloc = PageAllocator(spec)
+    for s in range(B):
+        alloc.ensure(s, spec.seq_capacity)
+    table = jnp.asarray(alloc.tables)
+    pages = {"xla": init_pages(spec), "pallas": init_pages(spec)}
+    active = jnp.ones((B,), bool)
+    rng = np.random.default_rng(6)
+    steps = 12 if window is None else 14              # ring wraps at 8
+    for t in range(steps):
+        tok = jnp.asarray(rng.integers(cfg.vocab_size, size=(B, 1)),
+                          jnp.int32)
+        pos = jnp.full((B,), t, jnp.int32)
+        logits = {}
+        for impl in ("xla", "pallas"):
+            logits[impl], pages[impl] = paged_decode_step(
+                params, pages[impl], table, tok, pos, active, cfg,
+                window=window, attn_impl=impl)
+        np.testing.assert_allclose(np.asarray(logits["xla"]),
+                                   np.asarray(logits["pallas"]),
+                                   rtol=1e-4, atol=1e-4, err_msg=f"step {t}")
+    # layer-0 writes are bitwise (projected from the shared embedding);
+    # deeper layers' KV sit downstream of layer-0's attention output, so
+    # cross-impl they are allclose, not bit-equal
+    for name in ("k", "v"):
+        a = np.asarray(pages["xla"][name])
+        b = np.asarray(pages["pallas"][name])
+        assert np.array_equal(a[0], b[0])
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)

@@ -425,3 +425,90 @@ def test_serving_metrics_land_in_registry():
     assert reg.counter("serving.requests_completed").value == 3
     assert reg.counter("serving.tokens_generated").value == \
         sum(r.gen for r in reqs)
+
+
+# ---------------------------------------------------------------------------
+# bucketed gather ladder + in-kernel paged decode through the server
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("window", [None, 8])
+def test_bucketed_gather_matches_full_tokens(window):
+    """gather_mode="bucket" narrows the decode gather to the live page
+    high-water bucket; tokens must equal the full-capacity bitwise arm
+    (narrowing re-tiles XLA reductions — token-level, like batch width)."""
+    cfg = _cfg(window=window)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    reqs = sample_requests(poisson_trace(40.0, 6, seed=4), cfg,
+                           prompt_range=(4, 8), gen_range=(3, 6), seed=4)
+    toks = {}
+    for gm in ("full", "bucket"):
+        srv = ContinuousServer(cfg, params, slots=2, page_size=4,
+                               max_seq=16, window=window, gather_mode=gm)
+        srv.warmup([8])
+        toks[gm] = srv.run(reqs).tokens
+    for rid in toks["full"]:
+        assert np.array_equal(toks["full"][rid], toks["bucket"][rid]), rid
+
+
+def test_gather_bucket_uses_active_rows_only():
+    """Retired slots keep stale positions; the ladder must size the
+    gather from live rows alone (and never exceed capacity)."""
+    cfg = _cfg()
+    srv = ContinuousServer(cfg, slots=2, page_size=4, max_seq=16)
+    pos = np.array([3, 900], np.int32)        # row 1 retired, stale pos
+    act = np.array([True, False])
+    assert srv._gather_bucket(pos, act) == 1
+    assert srv._gather_bucket(pos, ~act) is None      # capacity-clamped
+    assert srv._gather_bucket(pos, np.zeros(2, bool)) is None
+    srv_full = ContinuousServer(cfg, slots=2, page_size=4, max_seq=16,
+                                gather_mode="full")
+    assert srv_full._gather_bucket(pos, act) is None
+
+
+@pytest.mark.parametrize("arch_type,window", [("dense", None), ("moe", 8)])
+def test_continuous_pallas_kernel_matches_xla_tokens(arch_type, window):
+    """attn_impl="pallas" routes decode AND the scan-prefill inner step
+    through the in-kernel page walk; the served token streams must match
+    the XLA gather arm."""
+    cfg = _cfg(arch_type=arch_type, kv=1, window=window)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    reqs = sample_requests(poisson_trace(40.0, 4, seed=6), cfg,
+                           prompt_range=(4, 8), gen_range=(3, 5), seed=6)
+    toks = {}
+    for impl in ("xla", "pallas"):
+        srv = ContinuousServer(cfg, params, slots=2, page_size=4,
+                               max_seq=16, window=window, attn_impl=impl)
+        toks[impl] = srv.run(reqs).tokens
+    for rid in toks["xla"]:
+        assert np.array_equal(toks["xla"][rid], toks["pallas"][rid]), rid
+
+
+def test_pallas_gather_ring_fallback_warns_and_notes():
+    """flash-over-a-copy cannot express a wrapped ring: constructing the
+    server with attn_impl="pallas_gather" under a sliding window must
+    warn AND pin a note in the metric registry — and re-pin it when a
+    fresh registry is attached for a measured run."""
+    from repro.obs.metrics import MetricRegistry
+    cfg = _cfg(window=8)
+    with pytest.warns(UserWarning, match="pallas_gather"):
+        srv = ContinuousServer(cfg, slots=2, page_size=4, max_seq=16,
+                               attn_impl="pallas_gather")
+    assert any("falls back" in n for n in srv.registry.notes)
+    fresh = MetricRegistry()
+    srv.reset(registry=fresh)
+    assert any("falls back" in n for n in fresh.notes)
+
+    # full-window pallas_gather is the real flash arm: no warning, no note
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        srv2 = ContinuousServer(_cfg(window=None), slots=2, page_size=4,
+                                max_seq=16, attn_impl="pallas_gather")
+    assert srv2.registry.notes == []
+
+    with pytest.raises(ValueError, match="attn_impl"):
+        ContinuousServer(cfg, slots=2, page_size=4, max_seq=16,
+                         attn_impl="nope")
+    with pytest.raises(ValueError, match="gather_mode"):
+        ContinuousServer(cfg, slots=2, page_size=4, max_seq=16,
+                         gather_mode="nope")
